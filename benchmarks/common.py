@@ -1,0 +1,25 @@
+"""Shared benchmark plumbing: timing + the ``name,us_per_call,derived`` CSV
+contract, plus the paper-calibrated simulator defaults."""
+from __future__ import annotations
+
+import time
+
+ROWS = []
+
+
+def record(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+# paper-calibrated setup (see core.shaping_sim docstring + EXPERIMENTS.md)
+SIM_KW = dict(total_batch=64, n_passes=8)
+PLIST = {"vgg16": [2, 4, 8], "googlenet": [2, 4, 8, 16],
+         "resnet50": [2, 4, 8, 16]}

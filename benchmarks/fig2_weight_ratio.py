@@ -1,0 +1,42 @@
+"""Paper Fig. 2: kernel-weight share of total memory traffic for the conv/FC
+layers — the trend (newer, leaner nets move less weight per byte of
+activations) is the premise that makes partitioning win.  Extended beyond
+the paper with the LM-arch equivalents (weights vs activation traffic per
+training pass)."""
+from __future__ import annotations
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.traffic import lm_layer_traces
+from repro.models.cnn import model_traces
+from .common import record, timed
+
+
+def weight_share(traces, batch: int) -> float:
+    w = sum(t.weight_bytes for t in traces if t.kind in ("conv", "fc"))
+    a = sum(t.act_bytes_per_img * batch for t in traces
+            if t.kind in ("conv", "fc"))
+    return w / max(w + a, 1.0)
+
+
+def run():
+    out = {}
+    for name in ("vgg16", "googlenet", "resnet50"):
+        tr, us = timed(model_traces, name)
+        share = weight_share(tr, 64)
+        out[name] = share
+        record(f"fig2_weight_ratio_{name}", us, f"share={share:.3f}@batch64")
+    # beyond paper: LM archs at train_4k-like load (1 seq of 4096)
+    for arch in ("qwen2_7b", "qwen3_moe_30b_a3b", "mamba2_130m"):
+        cfg = get_config(arch)
+        tr, us = timed(lm_layer_traces, cfg, 4096)
+        share = weight_share([t for t in tr if t.kind in
+                              ("attn", "mlp", "moe", "ssm", "fc")], 1)
+        out[arch] = share
+        record(f"fig2_weight_ratio_{arch}", us, f"share={share:.3f}@seq4096")
+    # the paper's trend: VGG >> GoogleNet/ResNet
+    assert out["vgg16"] > out["resnet50"] > 0
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Paper Fig. 4: as the synchronous group grows (cores = batch, no
+partitioning), the std of total bandwidth grows and the average bandwidth
+*per core* falls — the queueing loss that motivates partitioning."""
+from __future__ import annotations
+
+from repro.core.shaping_sim import simulate
+from repro.models.cnn import model_traces
+from .common import record, timed
+
+
+def run():
+    tr = model_traces("resnet50")
+    rows = {}
+    prev_per_core = None
+    for cores in (8, 16, 32, 64):
+        r, us = timed(simulate, tr, partitions=1, total_batch=cores,
+                      total_cores=cores, n_passes=6, stagger="none")
+        per_core = r.bw_mean / cores
+        rows[cores] = (per_core, r.bw_std)
+        record(f"fig4_cores{cores}", us,
+               f"bw_per_core={per_core/1e9:.2f}GB/s std={r.bw_std/1e9:.1f}GB/s")
+    # paper invariant: std grows with cores; per-core average falls
+    assert rows[64][1] > rows[8][1]
+    assert rows[64][0] < rows[8][0] * 1.05
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Benchmark harness: one entry per paper table/figure + the roofline
+report.  Prints ``name,us_per_call,derived`` CSV rows (see common.py)."""
+from __future__ import annotations
+
+import traceback
+
+
+def main() -> None:
+    from . import (fig1_bandwidth_over_time, fig2_weight_ratio,
+                   fig4_std_vs_cores, fig5_partition_sweep,
+                   fig6_traffic_trace, table1_resnet_layers)
+    from . import roofline_report
+
+    print("name,us_per_call,derived")
+    failures = []
+    for mod, args in [
+        (fig1_bandwidth_over_time, ()),
+        (fig2_weight_ratio, ()),
+        (table1_resnet_layers, ()),
+        (fig4_std_vs_cores, ()),
+        (fig5_partition_sweep, ("uniform",)),
+        (fig5_partition_sweep, ("optimized",)),
+        (fig6_traffic_trace, ()),
+        (roofline_report, ()),
+    ]:
+        try:
+            mod.run(*args)
+        except Exception as e:  # noqa: BLE001
+            failures.append((mod.__name__, e))
+            print(f"{mod.__name__},0.0,ERROR:{e}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} benchmark(s) failed: "
+                         f"{[f[0] for f in failures]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Paper Table 1: per-layer bandwidth demand and achieved TFLOP/s for
+representative ResNet-50 layers on the 64-core KNL setup.
+
+Paper values (measured): pooling 254 GB/s; conv2_1a 174 GB/s @2.9T;
+conv2_2a 120 @3.0T; conv3_2b 55 @3.7T; conv4_3a 76 @3.0T; conv5_3b 15 @2.2T.
+We report the analytic demand of the matching layers from our traces under
+the calibrated efficiency model.
+"""
+from __future__ import annotations
+
+from repro.core import hw
+from repro.core.shaping_sim import ACT_AMP, KIND_EFF
+from repro.models.cnn import model_traces
+from .common import record, timed
+
+# trace-name -> paper row (layer names per He et al. numbering)
+PICKS = {
+    "op2.pool": ("pooling", 254),
+    "op3.c1": ("conv2_1a", 174),     # first 1x1/64 in conv2_x
+    "op4.c1": ("conv2_2a", 120),
+    "op7.c3": ("conv3_2b", 55),      # a 3x3/128 in conv3_x
+    "op11.c1": ("conv4_3a", 76),
+    "op16.c3": ("conv5_3b", 15),     # a 3x3/512 in conv5_x
+}
+
+
+def run(batch: int = 64):
+    traces, us = timed(model_traces, "resnet50")
+    rate = hw.KNL_PEAK_FLOPS
+    rows = {}
+    for t in traces:
+        if t.name not in PICKS:
+            continue
+        label, paper_bw = PICKS[t.name]
+        eff = KIND_EFF.get(t.kind, 0.4)
+        amp = ACT_AMP.get(t.kind, 1.0)
+        dur = t.flops_per_img * batch / (rate * eff)
+        byts = t.weight_bytes + t.act_bytes_per_img * batch * amp
+        bw = byts / dur
+        tflops = rate * eff / 1e12
+        rows[label] = (bw, tflops, paper_bw)
+        record(f"table1_{label}", us / len(PICKS),
+               f"bw={bw/1e9:.0f}GB/s paper={paper_bw}GB/s "
+               f"achieved={tflops:.1f}TFLOPs")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

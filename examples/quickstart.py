@@ -1,0 +1,50 @@
+"""Quickstart: train a small LM for a few steps with the full substrate
+(pipeline, AdamW, checkpointing) and decode from it.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import CheckpointManager
+from repro.configs import SMOKE_SHAPES, get_config
+from repro.data.pipeline import synth_lm_batch
+from repro.models import api as mapi
+from repro.optim.adamw import adamw_init
+from repro.runtime import steps as RS
+
+
+def main():
+    cfg = get_config("qwen2-7b", smoke=True)  # reduced config, CPU-runnable
+    api = mapi.build(cfg)
+    shape = SMOKE_SHAPES["train_4k"]
+
+    params = api.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = jax.jit(RS.make_train_step(api, peak_lr=5e-3, warmup=2, total=40),
+                   donate_argnums=(0, 1))
+    ckpt = CheckpointManager("/tmp/repro_quickstart")
+
+    for s in range(20):
+        batch = {k: jnp.asarray(v) for k, v in
+                 synth_lm_batch(cfg, shape, s).items()}
+        params, opt, m = step(params, opt, batch)
+        if s % 5 == 0:
+            print(f"step {s:3d} loss={float(m['loss']):.4f} "
+                  f"gnorm={float(m['grad_norm']):.3f}")
+    ckpt.save(20, {"params": params})
+
+    # greedy decode a few tokens
+    prompt = jnp.asarray([[5, 17, 42, 7]], jnp.int32)
+    _, cache = api.prefill(params, {"tokens": prompt}, max_len=16)
+    tok = prompt[:, -1:]
+    out = []
+    for _ in range(8):
+        logits, cache = api.decode(params, tok, cache)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+    print("generated:", out)
+
+
+if __name__ == "__main__":
+    main()

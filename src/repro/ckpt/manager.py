@@ -1,0 +1,114 @@
+"""Atomic checkpoint save/restore with keep-last-k and elastic resume.
+
+Layout: <dir>/step_<N>/ { meta.json, arrays.npz } written to a tmp dir and
+``os.rename``d (atomic on POSIX) so a crash mid-save never corrupts the
+latest checkpoint.  Keys are '/'-joined tree paths.
+
+Fault-tolerance contract (see DESIGN.md §9):
+  * save cadence aligns to partition sync points — every partition can roll
+    forward from the last sync, bounding lost work to one async window;
+  * ``restore(..., shardings=...)`` re-places arrays under a NEW mesh, so
+    recovery onto fewer/more devices (elastic) is a restore, not a special
+    path;  * the data cursor is the step number (pipeline is (seed, step)-
+    deterministic), so resume is exact.
+
+At 1000+-node scale the npz payload becomes per-host sharded array files
+(same tree-path keying); the manager logic (atomicity, keep-k, manifest)
+is unchanged — that swap is localized to _write_arrays/_read_arrays.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:  # npz-safe (lossless upcast)
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def _unflatten_like(template, flat: dict):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = flat[key]
+        leaves.append(jnp.asarray(arr).astype(leaf.dtype).reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory, keep: int = 3):
+        self.dir = Path(directory)
+        self.keep = keep
+        self.dir.mkdir(parents=True, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, state: dict, meta: dict | None = None):
+        """state: pytree dict (params, opt_state, ...). Atomic."""
+        tmp = self.dir / f".tmp_step_{step}_{os.getpid()}"
+        final = self.dir / f"step_{step}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        flat = _flatten(state)
+        np.savez(tmp / "arrays.npz", **flat)
+        info = {"step": step, "time": time.time(), "keys": len(flat)}
+        info.update(meta or {})
+        (tmp / "meta.json").write_text(json.dumps(info))
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = sorted(self.steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+
+    def steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            if (p / "meta.json").exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self):
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, template, step: int | None = None,
+                shardings=None):
+        """Restore into the structure of ``template``; optional shardings
+        re-place arrays on a (possibly different) mesh — the elastic path."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step}"
+        with np.load(d / "arrays.npz") as z:
+            flat = {k: z[k] for k in z.files}
+        state = _unflatten_like(template, flat)
+        meta = json.loads((d / "meta.json").read_text())
+        if shardings is not None:
+            state = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), state, shardings)
+        return state, meta

@@ -1,0 +1,2 @@
+from .base import (ARCH_IDS, CNN_IDS, SHAPES, SMOKE_SHAPES, ModelConfig,
+                   ShapeCell, applicable_shapes, canonical, get_config)

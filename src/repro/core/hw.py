@@ -1,0 +1,23 @@
+"""Hardware constants.
+
+TPU v5e (the deployment target for the framework):
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s per ICI link.
+
+Intel Knights Landing / Xeon Phi 7210 (the paper's evaluation platform,
+used by the faithful-reproduction benchmarks):
+  64 cores, 6 TFLOP/s fp32 aggregate, MCDRAM up to 400 GB/s, 16 GB capacity.
+"""
+
+# --- TPU v5e ---
+TPU_PEAK_FLOPS = 197e12        # bf16 per chip
+TPU_HBM_BW = 819e9             # bytes/s per chip
+TPU_ICI_BW = 50e9              # bytes/s per link (roofline denominator)
+TPU_HBM_GB = 16.0
+
+# --- Paper's KNL (Xeon Phi 7210) ---
+KNL_CORES = 64
+KNL_PEAK_FLOPS = 6e12          # fp32 aggregate
+KNL_FLOPS_PER_CORE = KNL_PEAK_FLOPS / KNL_CORES
+KNL_MEM_BW = 400e9             # MCDRAM bytes/s
+KNL_MEM_GB = 16.0
+KNL_LLC_BYTES = 32e6           # aggregate L2

@@ -1,0 +1,261 @@
+"""Per-layer (FLOPs, bytes) traffic traces + analytic whole-model totals.
+
+Two consumers:
+  1. the statistical-traffic-shaping simulator (paper reproduction) — CNN
+     traces come from ``repro.models.cnn.model_traces``; LM traces from
+     ``lm_layer_traces`` here (beyond-paper: shaping analysis for LM phases);
+  2. the roofline report — ``lm_totals`` provides exact analytic FLOPs /
+     parameter counts per (arch x shape) cell, cross-checked against XLA
+     cost_analysis (which counts scan bodies once; see core.roofline).
+
+Conventions: FLOPs = 2 x MACs; bf16 weights/activations (2 bytes) for LMs,
+fp32 (4 bytes) for the paper's CNNs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models.cnn import LayerTrace
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter counts
+# ---------------------------------------------------------------------------
+
+
+def attn_params(cfg: ModelConfig) -> int:
+    hd = cfg.head_dim
+    p = cfg.d_model * (cfg.n_heads * hd) * 2  # wq + wo
+    p += cfg.d_model * (cfg.n_kv_heads * hd) * 2  # wk + wv
+    if cfg.qkv_bias:
+        p += (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+    return p
+
+
+def mlp_params(cfg: ModelConfig, d_ff=None) -> int:
+    f = d_ff or cfg.d_ff
+    mult = 3 if cfg.act == "silu" else 2
+    return mult * cfg.d_model * f
+
+
+def ssm_params(cfg: ModelConfig) -> int:
+    di = cfg.ssm_heads * cfg.ssm_head_dim
+    gn = cfg.ssm_groups * cfg.ssm_state
+    p = cfg.d_model * (2 * di + 2 * gn + cfg.ssm_heads)  # in_proj
+    p += cfg.ssm_conv * (di + 2 * gn)                    # conv
+    p += di * cfg.d_model                                # out_proj
+    p += 3 * cfg.ssm_heads + di                          # A, D, dt_bias, norm
+    return p
+
+
+def layer_params(cfg: ModelConfig) -> dict:
+    """Per-layer parameter counts by component, plus active (MoE) counts."""
+    out = {"attn": 0, "mlp": 0, "moe": 0, "moe_active": 0, "ssm": 0,
+           "norms": 2 * cfg.d_model}
+    if cfg.family != "ssm":
+        out["attn"] = attn_params(cfg)
+    if cfg.family in ("ssm", "hybrid"):
+        out["ssm"] = ssm_params(cfg)
+    if cfg.n_experts:
+        e = mlp_params(cfg)
+        out["moe"] = cfg.n_experts * e + cfg.d_model * cfg.n_experts
+        out["moe_active"] = cfg.top_k * e + cfg.d_model * cfg.n_experts
+        if cfg.n_shared_experts:
+            sh = mlp_params(cfg, cfg.d_ff * cfg.n_shared_experts)
+            out["moe"] += sh
+            out["moe_active"] += sh
+    elif cfg.d_ff:
+        out["mlp"] = mlp_params(cfg)
+    return out
+
+
+def model_params(cfg: ModelConfig) -> dict:
+    lp = layer_params(cfg)
+    per_layer = sum(v for k, v in lp.items() if k != "moe_active")
+    per_layer_active = (lp["attn"] + lp["mlp"] + lp["ssm"] + lp["norms"]
+                       + lp["moe_active"])
+    embed = cfg.vocab * cfg.d_model
+    head = 0 if cfg.tie_embeddings else cfg.vocab * cfg.d_model
+    total = cfg.n_layers * per_layer + embed + head
+    active = cfg.n_layers * per_layer_active + embed + head
+    if cfg.family == "encdec":
+        # encoder blocks: attn + gelu-mlp + norms
+        enc_layer = attn_params(cfg) + 2 * cfg.d_model * cfg.d_ff + 2 * cfg.d_model
+        # decoder adds cross-attention
+        total += cfg.enc_layers * enc_layer + cfg.n_layers * attn_params(cfg)
+        active = total
+        total += cfg.max_seq * cfg.d_model  # learned positions
+        active += cfg.max_seq * cfg.d_model
+    if cfg.n_meta_tokens:
+        total += cfg.n_meta_tokens * cfg.d_model
+        active = total
+    return {"total": total, "active": active, "per_layer": per_layer,
+            "embed": embed + head, "by_component": lp}
+
+
+# ---------------------------------------------------------------------------
+# analytic FLOPs per cell (exact, for roofline MODEL_FLOPS + cross-check)
+# ---------------------------------------------------------------------------
+
+
+def attn_flops_per_layer(cfg, S, B, causal=True, window=0, decode=False):
+    """Score + PV einsum FLOPs (projections are counted via params)."""
+    hd = cfg.head_dim
+    if decode:  # one token against S cache entries
+        kv = min(window, S) if window else S
+        return 2.0 * B * cfg.n_heads * hd * kv * 2
+    if window:
+        kv_per_q = min(window, S)
+        eff = S * kv_per_q
+    else:
+        eff = S * S / 2 if causal else S * S
+    return 2.0 * B * cfg.n_heads * hd * eff * 2  # QK^T and PV
+
+
+def ssd_flops_per_layer(cfg, S, B, decode=False):
+    H, N, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    if decode:
+        return 2.0 * B * H * P * N * 2
+    Q = min(cfg.ssm_chunk, S)
+    per_chunk = (2.0 * Q * Q * H * N      # CB^T scores
+                 + 2.0 * Q * Q * H * P    # y_diag
+                 + 2.0 * Q * H * P * N * 2  # states in/out
+                 + 2.0 * Q * H * P * N)   # y_off
+    return B * (S / Q) * per_chunk
+
+
+def cell_flops(cfg: ModelConfig, shape: ShapeCell) -> dict:
+    """Analytic forward/step FLOPs decomposition for one cell."""
+    B = shape.global_batch
+    decode = shape.kind == "decode"
+    S = 1 if decode else shape.seq_len
+    ctx = shape.seq_len
+    tokens = B * S
+    lp = layer_params(cfg)
+    # projection/mlp flops: 2 * active params * tokens
+    proj_per_layer = 2.0 * tokens * (lp["attn"] + lp["mlp"] + lp["ssm"]
+                                     + lp["moe_active"])
+    attn = ssd = 0.0
+    if cfg.family != "ssm":
+        w = cfg.attn_window
+        full_layers = (len(cfg.global_layers) if w else cfg.n_layers)
+        swa_layers = cfg.n_layers - full_layers
+        attn = full_layers * attn_flops_per_layer(
+            cfg, ctx, B, decode=decode)
+        if swa_layers:
+            attn += swa_layers * attn_flops_per_layer(
+                cfg, ctx, B, window=w, decode=decode)
+    if cfg.family in ("ssm", "hybrid"):
+        ssd = cfg.n_layers * ssd_flops_per_layer(cfg, S, B, decode=decode)
+    head = 2.0 * tokens * cfg.d_model * cfg.vocab
+    embed = 0.0  # gather
+    enc = 0.0
+    if cfg.family == "encdec":
+        enc_tokens = B * cfg.enc_seq
+        enc_layer = attn_params(cfg) + 2 * cfg.d_model * cfg.d_ff
+        enc = cfg.enc_layers * (2.0 * enc_tokens * enc_layer
+                                + attn_flops_per_layer(cfg, cfg.enc_seq, B,
+                                                       causal=False))
+        # decoder cross-attn projections + scores
+        enc += cfg.n_layers * (2.0 * tokens * attn_params(cfg)
+                               + 2.0 * B * cfg.n_heads * cfg.head_dim
+                               * S * cfg.enc_seq * 2)
+    proj_total = proj_per_layer * cfg.n_layers
+    fwd = proj_total + attn + ssd + head + embed + enc
+    total = 3.0 * fwd if shape.kind == "train" else fwd  # bwd = 2x fwd
+    return {"fwd": fwd, "total": total, "attn": attn, "ssd": ssd,
+            "head": head, "proj": proj_total, "enc": enc}
+
+
+def cell_bytes(cfg: ModelConfig, shape: ShapeCell, accum: int = 4,
+               dtype_bytes: int = 2) -> dict:
+    """Analytic HBM traffic per step (whole job; divide by chips for the
+    per-device roofline memory term).
+
+    Training model: weights stream 3x per microbatch (fwd + remat-recompute
+    + bwd) since the full-remat policy keeps only layer-boundary residuals;
+    optimizer touches ~30 B/param (f32 m/v/param read+write, bf16 grads);
+    activations ~12 residual-equivalents per layer per pass (qkv/attn/mlp
+    reads+writes) x3 for train; attention K/V re-stream once per q-chunk
+    tier; chunked CE streams logits twice (fwd + bwd recompute).
+    """
+    B = shape.global_batch
+    decode = shape.kind == "decode"
+    S = 1 if decode else shape.seq_len
+    tokens = B * S
+    mp = model_params(cfg)
+    d = cfg.d_model
+    L = cfg.n_layers
+
+    if shape.kind == "train":
+        w = mp["active"] * dtype_bytes * 3 * accum  # stream per microbatch
+        opt = mp["total"] * 30.0
+        act = 12.0 * tokens * d * L * dtype_bytes * 3
+        ce = 2.0 * tokens * cfg.vocab * 4
+    else:
+        w = mp["active"] * dtype_bytes  # one pass
+        opt = 0.0
+        act = 8.0 * tokens * d * L * dtype_bytes
+        ce = tokens * cfg.vocab * 4 if not decode else B * cfg.vocab * 4
+    kv = 0.0
+    if cfg.family != "ssm":
+        hd = cfg.head_dim
+        ctx = shape.seq_len
+        if decode:  # read the whole cache once per step + tiny write
+            w_eff = min(cfg.attn_window or ctx, ctx) if cfg.attn_window else ctx
+            full = len(cfg.global_layers) if cfg.attn_window else L
+            swa = L - full
+            kv = 2.0 * B * cfg.n_kv_heads * hd * dtype_bytes * (
+                full * ctx + swa * w_eff)
+        else:  # prefill/train: K/V written once, re-read per q-chunk
+            nq = max(ctx // cfg.attn_q_chunk, 1)
+            kv = 2.0 * B * ctx * cfg.n_kv_heads * hd * dtype_bytes * (1 + nq)
+            if shape.kind == "train":
+                kv *= 3
+    total = w + opt + act + ce + kv
+    return {"total": total, "weights": w, "optimizer": opt, "acts": act,
+            "ce": ce, "kv": kv}
+
+
+# ---------------------------------------------------------------------------
+# LM layer traces for the shaping simulator (beyond-paper analysis)
+# ---------------------------------------------------------------------------
+
+
+def lm_layer_traces(cfg: ModelConfig, seq: int, dtype_bytes: int = 2):
+    """Per-layer-component LayerTrace list for ONE sequence (batch=1 image
+    equivalent): the LM analogue of the CNN traces the paper profiles."""
+    lp = layer_params(cfg)
+    d = cfg.d_model
+    out = []
+    act = seq * d * dtype_bytes
+
+    for i in range(cfg.n_layers):
+        win = cfg.attn_window if (cfg.attn_window and
+                                  i not in cfg.global_layers) else 0
+        if lp["attn"]:
+            fl = (2.0 * seq * lp["attn"]
+                  + attn_flops_per_layer(cfg, seq, 1, window=win))
+            out.append(LayerTrace(f"l{i}.attn", "attn", fl,
+                                  lp["attn"] * dtype_bytes, 4 * act))
+        if lp["ssm"]:
+            fl = 2.0 * seq * lp["ssm"] + ssd_flops_per_layer(cfg, seq, 1)
+            out.append(LayerTrace(f"l{i}.ssm", "ssm", fl,
+                                  lp["ssm"] * dtype_bytes, 4 * act))
+        if lp["moe_active"]:
+            fl = 2.0 * seq * lp["moe_active"]
+            # weights: active experts' slices must stream per pass
+            wb = lp["moe_active"] * dtype_bytes
+            out.append(LayerTrace(f"l{i}.moe", "moe", fl, wb, 6 * act))
+        elif lp["mlp"]:
+            fl = 2.0 * seq * lp["mlp"]
+            out.append(LayerTrace(f"l{i}.mlp", "mlp", fl,
+                                  lp["mlp"] * dtype_bytes, 4 * act))
+        # norm/residual: memory-bound phase (the BN analogue)
+        out.append(LayerTrace(f"l{i}.norm", "bn", 8.0 * seq * d, 0.0, 3 * act))
+    # head
+    out.append(LayerTrace("head", "fc", 2.0 * seq * d * cfg.vocab,
+                          cfg.vocab * d * dtype_bytes,
+                          act + seq * cfg.vocab * 4))
+    return out

@@ -1,0 +1,61 @@
+"""Implicit-GEMM conv2d Pallas TPU kernel (NHWC x HWIO).
+
+TPU adaptation of the paper's conv hot-spot: instead of a CPU im2col +
+GEMM (which materializes the k^2-amplified patch matrix in memory — the
+very traffic the paper measures), the input H x W x C panel is staged in
+VMEM once per image and the kh*kw reduction is unrolled into MXU dots over
+strided in-register slices: the im2col never touches HBM.
+
+Grid: (N, K/tk).  VMEM working set = H*W*C*in_bytes + kh*kw*C*tk*in_bytes
++ Ho*Wo*tk*4 (f32 acc); ops.py asserts it fits the ~16 MiB VMEM budget.
+Input is pre-padded in ops.py so the kernel computes a VALID conv.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, stride: int,
+                 Ho: int, Wo: int):
+    x = x_ref[0]  # (H, W, C)
+    C = x.shape[-1]
+    tk = w_ref.shape[-1]
+    acc = jnp.zeros((Ho * Wo, tk), jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            xs = x[i:i + (Ho - 1) * stride + 1:stride,
+                   j:j + (Wo - 1) * stride + 1:stride, :]
+            acc += jnp.dot(xs.reshape(Ho * Wo, C), w_ref[i, j],
+                           preferred_element_type=jnp.float32)
+    o_ref[0] = acc.reshape(Ho, Wo, tk).astype(o_ref.dtype)
+
+
+def conv2d_pallas(x, w, *, stride: int = 1, tk: int = 128,
+                  interpret: bool = False):
+    """x: (N, H, W, C) — already padded (VALID conv); w: (kh, kw, C, K)."""
+    N, H, W, C = x.shape
+    kh, kw, C2, K = w.shape
+    assert C == C2
+    Ho = (H - kh) // stride + 1
+    Wo = (W - kw) // stride + 1
+    tk = min(tk, K)
+    while K % tk:
+        tk -= 1
+
+    kernel = functools.partial(_conv_kernel, kh=kh, kw=kw, stride=stride,
+                               Ho=Ho, Wo=Wo)
+    return pl.pallas_call(
+        kernel,
+        grid=(N, K // tk),
+        in_specs=[
+            pl.BlockSpec((1, H, W, C), lambda n, k: (n, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, C, tk), lambda n, k: (0, 0, 0, k)),
+        ],
+        out_specs=pl.BlockSpec((1, Ho, Wo, tk), lambda n, k: (n, 0, 0, k)),
+        out_shape=jax.ShapeDtypeStruct((N, Ho, Wo, K), x.dtype),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,37 @@
+"""Jit'd public wrapper for the conv2d kernel: SAME/VALID padding, VMEM
+budget check, interpret-mode fallback off-TPU."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .conv2d import conv2d_pallas
+
+VMEM_BUDGET = 16 * 2**20
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def vmem_bytes(H, W, C, kh, kw, tk, Ho, Wo, in_bytes):
+    return (H * W * C + kh * kw * C * tk) * in_bytes + Ho * Wo * tk * 4
+
+
+@partial(jax.jit, static_argnames=("stride", "padding", "tk", "interpret"))
+def conv2d(x, w, *, stride: int = 1, padding: str = "SAME", tk: int = 128,
+           interpret: bool | None = None):
+    """x: (N, H, W, C); w: (kh, kw, C, K) -> (N, Ho, Wo, K)."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    kh, kw = w.shape[:2]
+    if padding == "SAME":
+        N, H, W, C = x.shape
+        Ho = -(-H // stride)
+        Wo = -(-W // stride)
+        ph = max((Ho - 1) * stride + kh - H, 0)
+        pw = max((Wo - 1) * stride + kw - W, 0)
+        x = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2),
+                        (pw // 2, pw - pw // 2), (0, 0)))
+    return conv2d_pallas(x, w, stride=stride, tk=tk, interpret=interp)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the conv2d kernel."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d(x, w, *, stride: int = 1, padding: str = "SAME"):
+    """x: (N, H, W, C) NHWC; w: (kh, kw, C, K) HWIO -> (N, Ho, Wo, K)."""
+    return lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32).astype(x.dtype)

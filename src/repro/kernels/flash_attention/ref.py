@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash-attention kernel: materialized scores."""
+import math
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D); Hq % Hkv == 0.
+    window > 0 = sliding window of that many keys. Returns (B, Sq, Hq, D)."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qr = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    q_pos = jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    ok = jnp.ones((Sq, Skv), bool)
+    if causal:
+        ok &= q_pos[:, None] >= k_pos[None, :]
+    if window:
+        ok &= (q_pos[:, None] - k_pos[None, :]) < window
+    s = jnp.where(ok, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, Hq, D).astype(q.dtype)

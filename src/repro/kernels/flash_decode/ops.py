@@ -1,0 +1,20 @@
+"""Jit'd public wrapper for the flash-decode kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .flash_decode import flash_decode_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("window", "bk", "interpret"))
+def flash_decode(q, k_cache, v_cache, cur_pos, *, window: int = 0,
+                 bk: int = 512, interpret: bool | None = None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return flash_decode_pallas(q, k_cache, v_cache, cur_pos, window=window,
+                               bk=bk, interpret=interp)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for flash-decode: one query token vs a (partially
+filled) KV cache."""
+import math
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def decode_attention(q, k_cache, v_cache, cur_pos, *, window: int = 0):
+    """q: (B, Hq, D); caches: (B, S, Hkv, D); cur_pos: () int32 — positions
+    [0, cur_pos] are valid. Returns (B, Hq, D)."""
+    B, Hq, D = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    qr = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qr, k_cache,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    ok = pos[None, :] <= cur_pos
+    if window:
+        ok &= pos[None, :] > (cur_pos - window)
+    s = jnp.where(ok[:, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Hq, D).astype(q.dtype)

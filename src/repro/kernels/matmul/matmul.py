@@ -1,0 +1,60 @@
+"""Blocked matmul Pallas TPU kernel with configurable MXU-aligned tiles.
+
+Grid: (M/bm, N/bn, K/bk) with K as the minor (sequential) reduction axis;
+a f32 VMEM scratch accumulates partial products across K steps — the
+canonical TPU matmul tiling.  Block shapes are a §Perf hillclimb knob:
+VMEM working set = (bm*bk + bk*bn)*in_bytes + bm*bn*4 must fit ~16 MiB
+VMEM, and bm/bk/bn should be multiples of 128 to keep the MXU full.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def vmem_bytes(bm: int, bk: int, bn: int, in_bytes: int = 2) -> int:
+    return (bm * bk + bk * bn) * in_bytes + 2 * bm * bn * 4
+
+
+def matmul_pallas(a, b, *, bm: int = 256, bk: int = 512, bn: int = 256,
+                  interpret: bool = False):
+    """a: (M, K) @ b: (K, N) -> (M, N); tile sizes clamp to the dims and
+    must then divide them exactly."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0, (M, K, N, bm, bk, bn)
+    n_k = K // bk
+
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, n_k=n_k),
+        grid=(M // bm, N // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

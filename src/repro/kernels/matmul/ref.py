@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the blocked matmul kernel."""
+import jax.numpy as jnp
+
+
+def matmul(a, b):
+    """a: (M, K), b: (K, N) -> (M, N) in a's dtype, f32 accumulation."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(a.dtype)

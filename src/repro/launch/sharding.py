@@ -1,0 +1,193 @@
+"""Sharding rules: parameter, activation, and cache PartitionSpecs.
+
+Policy (baseline; the §Perf hillclimb iterates on this):
+  * params: Megatron-style TP over ``model`` on the feature/expert dim +
+    ZeRO-3/FSDP storage over ``data`` on the other dim, with divisibility
+    fallbacks (odd vocabs, 25-head configs, ... are handled by dropping the
+    offending axis rather than failing).
+  * batch dims shard over ("pod", "part", "data") — whichever divide.
+  * decode KV caches shard the *sequence* axis over ``model`` (GQA kv-head
+    counts < 16 make head-sharding impossible); XLA then emits the partial-
+    softmax all-reduces of flash-decode.
+  * per-partition traffic shaping: params stacked on a leading `part`/`pod`
+    axis are sharded on that axis (distinct per-partition replicas — the
+    paper's reuse-vs-shaping tradeoff).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .mesh import batch_axes
+
+STACK_KEYS = ("blocks", "enc_blocks", "dec_blocks")
+
+
+def _div(mesh, n: int, axis: str) -> bool:
+    return axis in mesh.shape and n % mesh.shape[axis] == 0
+
+
+def _ax(mesh, n: int, axis: str):
+    return axis if _div(mesh, n, axis) else None
+
+
+def _rule(mesh, name: str, path_names: tuple, shape: tuple,
+          fsdp: bool = True) -> P:
+    """PartitionSpec for a single (unstacked) parameter array.
+
+    ``fsdp=False`` = serving layout: params keep only their tensor-parallel
+    (model-axis) sharding and replicate over data — decode must move
+    KB-scale activations, not GB-scale weight gathers, every token."""
+    nd = len(shape)
+    in_moe = "moe" in path_names
+
+    def mk(*axes):
+        if not fsdp:
+            axes = tuple(a if a != "data" else None for a in axes)
+        return P(*axes)
+
+    if nd == 1:
+        # biases / norm scales: shard over model when large & divisible
+        if shape[0] >= 1024 and _div(mesh, shape[0], "model"):
+            return mk("model")
+        return P()
+    if name == "embed":
+        return mk(_ax(mesh, shape[0], "model"), _ax(mesh, shape[1], "data"))
+    if name == "lm_head":
+        return mk(_ax(mesh, shape[0], "data"), _ax(mesh, shape[1], "model"))
+    if name == "pos_dec":
+        return mk(_ax(mesh, shape[0], "data"), _ax(mesh, shape[1], "model"))
+    if name in ("wq", "wk", "wv", "in_proj", "ws1", "ws3"):
+        return mk(_ax(mesh, shape[0], "data"), _ax(mesh, shape[1], "model"))
+    if name in ("wo", "out_proj", "ws2"):
+        return mk(_ax(mesh, shape[0], "model"), _ax(mesh, shape[1], "data"))
+    if name in ("w1", "w3") and not in_moe:
+        return mk(_ax(mesh, shape[0], "data"), _ax(mesh, shape[1], "model"))
+    if name == "w2" and not in_moe:
+        return mk(_ax(mesh, shape[0], "model"), _ax(mesh, shape[1], "data"))
+    if in_moe and name in ("w1", "w3") and nd == 3:
+        return mk(_ax(mesh, shape[0], "model"), _ax(mesh, shape[1], "data"), None)
+    if in_moe and name == "w2" and nd == 3:
+        return mk(_ax(mesh, shape[0], "model"), None, _ax(mesh, shape[2], "data"))
+    if name == "router":
+        return mk(_ax(mesh, shape[0], "data"), _ax(mesh, shape[1], "model"))
+    if name == "conv_w":
+        return mk(None, _ax(mesh, shape[1], "model"))
+    if name == "meta":
+        return P()
+    # generic fallback: model on the largest divisible dim, data on the next
+    spec: list = [None] * nd
+    order = np.argsort(shape)[::-1]
+    for ax_name in (("model", "data") if fsdp else ("model",)):
+        for d in order:
+            if spec[d] is None and _div(mesh, shape[d], ax_name):
+                spec[d] = ax_name
+                break
+    return P(*spec)
+
+
+def _path_names(path) -> tuple:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def param_pspecs(params_shape, cfg, mesh, stack_axis: str | None = None,
+                 fsdp: bool = True):
+    """PartitionSpec tree matching a params (or ShapeDtypeStruct) tree.
+
+    ``stack_axis``: set to "part"/"pod" when params carry a leading
+    per-partition stacking dim (traffic-shaping runtime).
+    """
+    def one(path, x):
+        names = _path_names(path)
+        shape = tuple(x.shape)
+        prefix = []
+        if stack_axis is not None:
+            prefix.append(stack_axis)
+            shape = shape[1:]
+        if any(k in names for k in STACK_KEYS):
+            prefix.append(None)
+            shape = shape[1:]
+        base = _rule(mesh, names[-1], names, shape, fsdp=fsdp)
+        if not prefix:
+            return base
+        return P(*prefix, *list(base))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def param_shardings(params_shape, cfg, mesh, stack_axis=None, fsdp=True):
+    specs = param_pspecs(params_shape, cfg, mesh, stack_axis, fsdp=fsdp)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_shardings(specs: dict, mesh, global_batch: int, stack_axis=None):
+    """NamedShardings for an input_specs dict (batch-dim leading)."""
+    bax = batch_axes(mesh, global_batch)
+    if stack_axis is not None:
+        bax = tuple(a for a in bax if a != stack_axis)
+
+    def one(k, v):
+        nd = len(v.shape)
+        lead = (stack_axis,) if stack_axis else ()
+        spec = lead + ((bax,) if bax else (None,)) + (None,) * (nd - 1 - len(lead))
+        return NamedSharding(mesh, P(*spec))
+
+    return {k: one(k, v) for k, v in specs.items()}
+
+
+def cache_pspecs(cache_shape, cfg, mesh, global_batch: int):
+    """Decode-cache specs: batch over data axes, seq over `model`."""
+    bax = batch_axes(mesh, global_batch)
+    b = bax if bax else None
+
+    def one(path, x):
+        names = _path_names(path)
+        name = names[-1]
+        shape = tuple(x.shape)
+        if name in ("k", "v", "xk", "xv"):  # (L, B, S, Hkv, D)
+            # head_dim-sharded cache: D always divides the model axis while
+            # GQA kv-head counts never do; attention contractions over the
+            # sharded D become clean psums and the decode DUS stays local
+            # (S-sharding forced a cache reshard per step — 22 GiB/dev).
+            d_ax = "model" if shape[4] % mesh.shape["model"] == 0 else None
+            return P(None, b, None, None, d_ax)
+        if name == "ssm_state":  # (L, B, H, P, N)
+            n_ax = _ax(mesh, shape[-1], "model")
+            return P(None, b, None, None, n_ax)
+        if name == "ssm_conv":  # (L, B, K-1, C)
+            c_ax = _ax(mesh, shape[-1], "model")
+            return P(None, b, None, c_ax)
+        if name == "len":
+            return P()
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def cache_shardings(cache_shape, cfg, mesh, global_batch: int,
+                    auto_kv: bool = True):
+    """``auto_kv``: leave k/v shardings to XLA (None) — GSPMD factors the
+    model axis across (heads x head_dim), a layout PartitionSpec cannot
+    express; any explicit pin forces per-layer cache remats."""
+    specs = cache_pspecs(cache_shape, cfg, mesh, global_batch)
+
+    def one(path, s):
+        names = _path_names(path)
+        if auto_kv and names and names[-1] in ("k", "v", "xk", "xv"):
+            return None
+        return NamedSharding(mesh, s)
+
+    return jax.tree_util.tree_map_with_path(one, specs)

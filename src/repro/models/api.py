@@ -1,0 +1,165 @@
+"""Uniform model API over all architecture families.
+
+``build(cfg)`` returns a ``ModelAPI`` exposing:
+  init(key)                       -> params
+  loss(params, batch)             -> (loss, metrics)       [train shapes]
+  prefill(params, batch)          -> (logits, cache)       [prefill shapes]
+  decode(params, token, cache)    -> (logits, cache)       [decode shapes]
+  init_cache(batch, max_len)      -> cache pytree
+  input_specs(shape)              -> dict[str, ShapeDtypeStruct]
+  cache_specs(shape)              -> pytree of ShapeDtypeStruct
+
+Shape-cell semantics: ``seq_len`` is the TOTAL context the backbone
+processes.  Stub frontends (VLM patches, Hymba meta tokens, Whisper frames)
+occupy prefix positions inside that budget, so text token counts shrink
+accordingly (see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from . import encdec as ED
+from . import transformer as TF
+
+
+@dataclass
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable
+    forward: Callable
+    prefill: Callable
+    decode: Callable
+    init_cache: Callable
+    input_specs: Callable
+    cache_specs: Callable
+
+
+def _text_len(cfg: ModelConfig, seq_len: int) -> int:
+    s = seq_len
+    if cfg.n_img_tokens:
+        s -= cfg.n_img_tokens
+    if cfg.n_meta_tokens:
+        s -= cfg.n_meta_tokens
+    return max(s, 1)
+
+
+def build(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family == "encdec":
+        return _build_encdec(cfg)
+    return _build_lm(cfg)
+
+
+# ---------------------------------------------------------------------------
+# decoder-only families (dense / moe / ssm / hybrid / vlm)
+# ---------------------------------------------------------------------------
+
+
+def _build_lm(cfg: ModelConfig) -> ModelAPI:
+    dt = jnp.dtype(cfg.dtype)
+
+    def init(key):
+        return TF.init_lm(key, cfg)
+
+    def loss(params, batch):
+        return TF.loss_fn(params, cfg, batch)
+
+    def forward(params, batch):
+        return TF.forward_lm(params, cfg, batch)
+
+    def prefill(params, batch, max_len=None):
+        return TF.prefill(params, cfg, batch, max_len)
+
+    def decode(params, token, cache):
+        return TF.decode_step(params, cfg, token, cache)
+
+    def init_cache(batch, max_len):
+        return TF.init_cache(cfg, batch, max_len)
+
+    def input_specs(shape: ShapeCell):
+        B = shape.global_batch
+        if shape.kind == "decode":
+            return {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        S = _text_len(cfg, shape.seq_len)
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if cfg.n_img_tokens:
+            specs["img_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_img_tokens, cfg.d_model), dt)
+        return specs
+
+    def cache_specs(shape: ShapeCell):
+        B = shape.global_batch
+        max_len = shape.seq_len  # total context budget
+        cache = jax.eval_shape(lambda: init_cache(B, max_len))
+        return cache
+
+    return ModelAPI(cfg, init, loss, forward, prefill, decode, init_cache,
+                    input_specs, cache_specs)
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (whisper)
+# ---------------------------------------------------------------------------
+
+
+def _build_encdec(cfg: ModelConfig) -> ModelAPI:
+    dt = jnp.dtype(cfg.dtype)
+
+    def init(key):
+        return ED.init_encdec(key, cfg, max_dec_len=cfg.max_seq)
+
+    def loss(params, batch):
+        return ED.loss_encdec(params, cfg, batch)
+
+    def forward(params, batch):
+        return ED.forward_encdec(params, cfg, batch)
+
+    def prefill(params, batch, max_len=None):
+        enc_out = ED.encode(params, cfg, batch["enc_embeds"].astype(dt))
+        max_len = max_len or cfg.max_seq
+        cache = ED.init_encdec_cache(params, cfg, enc_out, max_len)
+        return None, cache
+
+    def decode(params, token, cache):
+        return ED.decode_step_encdec(params, cfg, token, cache)
+
+    def init_cache(batch, max_len):
+        enc_out = jnp.zeros((batch, cfg.enc_seq, cfg.d_model), dt)
+        return None  # encdec caches are built from enc_out via prefill
+
+    def input_specs(shape: ShapeCell):
+        B = shape.global_batch
+        if shape.kind == "decode":
+            return {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        S = shape.seq_len
+        specs = {
+            "enc_embeds": jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model), dt),
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return specs
+
+    def cache_specs(shape: ShapeCell):
+        B = shape.global_batch
+        hd = cfg.head_dim
+        Lc = cfg.n_layers
+        return {
+            "k": jax.ShapeDtypeStruct((Lc, B, shape.seq_len, cfg.n_kv_heads, hd), dt),
+            "v": jax.ShapeDtypeStruct((Lc, B, shape.seq_len, cfg.n_kv_heads, hd), dt),
+            "xk": jax.ShapeDtypeStruct((Lc, B, cfg.enc_seq, cfg.n_kv_heads, hd), dt),
+            "xv": jax.ShapeDtypeStruct((Lc, B, cfg.enc_seq, cfg.n_kv_heads, hd), dt),
+            "len": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    return ModelAPI(cfg, init, loss, forward, prefill, decode, init_cache,
+                    input_specs, cache_specs)

@@ -1,0 +1,240 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio conv frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, enc_seq, d) — i.e. the output of
+Whisper's two strided convs.  Everything downstream (sinusoidal encoder
+positions, bidirectional encoder, causal decoder with cross-attention, tied
+output head) is implemented.
+
+Whisper uses LayerNorm (+bias) and absolute positions; no rotary.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import layers as L
+from .pspec import pbatch, presidual
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def sinusoids(length: int, channels: int) -> np.ndarray:
+    assert channels % 2 == 0
+    log_timescale = math.log(10000) / (channels // 2 - 1)
+    inv = np.exp(-log_timescale * np.arange(channels // 2))
+    t = np.arange(length)[:, None] * inv[None, :]
+    return np.concatenate([np.sin(t), np.cos(t)], axis=1).astype(np.float32)
+
+
+def _ln_init(d, dt):
+    return {"w": jnp.ones((d,), dt), "b": jnp.zeros((d,), dt)}
+
+
+def _ln(x, p, eps):
+    return L.layer_norm(x, p["w"], p["b"], eps)
+
+
+def init_enc_block(key, cfg):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": _ln_init(cfg.d_model, dt),
+        "attn": L.init_attention(ks[0], cfg, dt),
+        "ln2": _ln_init(cfg.d_model, dt),
+        "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, "gelu", dt),
+    }
+
+
+def init_dec_block(key, cfg):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": _ln_init(cfg.d_model, dt),
+        "self_attn": L.init_attention(ks[0], cfg, dt),
+        "ln2": _ln_init(cfg.d_model, dt),
+        "cross_attn": L.init_attention(ks[1], cfg, dt),
+        "ln3": _ln_init(cfg.d_model, dt),
+        "mlp": L.init_mlp(ks[2], cfg.d_model, cfg.d_ff, "gelu", dt),
+    }
+
+
+def init_encdec(key, cfg, max_dec_len: int = 0):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ks[0], cfg.enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    max_dec = max_dec_len or cfg.max_seq
+    return {
+        "embed": L.embed_init(ks[2], cfg.vocab, cfg.d_model, dt),
+        "pos_dec": (jax.random.normal(ks[3], (max_dec, cfg.d_model),
+                                      jnp.float32) * 0.01).astype(dt),
+        "enc_blocks": jax.vmap(lambda k: init_enc_block(k, cfg))(enc_keys),
+        "dec_blocks": jax.vmap(lambda k: init_dec_block(k, cfg))(dec_keys),
+        "ln_enc": _ln_init(cfg.d_model, dt),
+        "ln_dec": _ln_init(cfg.d_model, dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+
+def _mha(p, cfg, q_x, kv_x, *, causal, positions=None):
+    """Generic attention: q from q_x, k/v from kv_x (cross if different)."""
+    B, Sq, _ = q_x.shape
+    hd = cfg.head_dim
+    q = q_x @ p["wq"]
+    k = kv_x @ p["wk"]
+    v = kv_x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, Sq, cfg.n_heads, hd)
+    k = k.reshape(B, kv_x.shape[1], cfg.n_kv_heads, hd)
+    v = v.reshape(B, kv_x.shape[1], cfg.n_kv_heads, hd)
+    o = L.flash_attention(q, k, v, causal=causal,
+                          q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk)
+    return o.reshape(B, Sq, -1) @ p["wo"], (k, v)
+
+
+def encode(params, cfg, enc_embeds):
+    """enc_embeds: (B, T_enc, d) stubbed frontend output -> (B, T_enc, d)."""
+    dt = enc_embeds.dtype
+    pos = jnp.asarray(sinusoids(enc_embeds.shape[1], cfg.d_model)).astype(dt)
+    x = presidual(enc_embeds + pos[None])
+
+    def body(x, bp):
+        h = _ln(x, bp["ln1"], cfg.norm_eps)
+        a, _ = _mha(bp["attn"], cfg, h, h, causal=False)
+        x = x + a
+        h = _ln(x, bp["ln2"], cfg.norm_eps)
+        x = x + L.mlp_block(bp["mlp"], h, "gelu")
+        return x, None
+
+    x, _ = lax.scan(body, x, params["enc_blocks"])
+    return _ln(x, params["ln_enc"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# decoder (teacher-forced full sequence)
+# ---------------------------------------------------------------------------
+
+
+def forward_encdec(params, cfg, batch):
+    """batch: enc_embeds (B,T,d), tokens (B,S). Returns (logits f32, aux=0)."""
+    enc_out = encode(params, cfg, batch["enc_embeds"].astype(_dtype(cfg)))
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = presidual(params["embed"][tokens] + params["pos_dec"][None, :S])
+
+    def body(x, bp):
+        h = _ln(x, bp["ln1"], cfg.norm_eps)
+        a, _ = _mha(bp["self_attn"], cfg, h, h, causal=True)
+        x = x + a
+        h = _ln(x, bp["ln2"], cfg.norm_eps)
+        a, _ = _mha(bp["cross_attn"], cfg, h, enc_out, causal=False)
+        x = x + a
+        h = _ln(x, bp["ln3"], cfg.norm_eps)
+        x = x + L.mlp_block(bp["mlp"], h, "gelu")
+        return x, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = lax.scan(body, x, params["dec_blocks"])
+    x = _ln(x, params["ln_dec"], cfg.norm_eps)
+    logits = (x @ params["embed"].T).astype(jnp.float32)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_encdec(params, cfg, batch):
+    logits, _ = forward_encdec(params, cfg, batch)
+    labels = batch["labels"]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = ((logz - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss, {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# decode with self KV cache + precomputed cross KV
+# ---------------------------------------------------------------------------
+
+
+def init_encdec_cache(params, cfg, enc_out, max_len):
+    """Precompute cross-attention K/V per layer; allocate self-cache."""
+    B = enc_out.shape[0]
+    dt = enc_out.dtype
+    hd = cfg.head_dim
+
+    def cross_kv(bp):
+        k = enc_out @ bp["cross_attn"]["wk"]
+        v = enc_out @ bp["cross_attn"]["wv"]
+        if cfg.qkv_bias:
+            k = k + bp["cross_attn"]["bk"]
+            v = v + bp["cross_attn"]["bv"]
+        k = k.reshape(B, -1, cfg.n_kv_heads, hd)
+        v = v.reshape(B, -1, cfg.n_kv_heads, hd)
+        return k, v
+
+    xk, xv = jax.vmap(cross_kv)(params["dec_blocks"])  # (L,B,T,H,D)
+    return {
+        "k": jnp.zeros((cfg.n_layers, B, max_len, cfg.n_kv_heads, hd), dt),
+        "v": jnp.zeros((cfg.n_layers, B, max_len, cfg.n_kv_heads, hd), dt),
+        "xk": xk, "xv": xv,
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step_encdec(params, cfg, token, cache):
+    """token: (B,1) int32 -> (logits (B,1,V) f32, cache)."""
+    pos = cache["len"]
+    x = params["embed"][token] + lax.dynamic_slice_in_dim(
+        params["pos_dec"], pos, 1, axis=0)[None]
+    hd = cfg.head_dim
+    B = token.shape[0]
+
+    def body(x, xs):
+        bp, kc, vc, xk, xv = xs
+        h = _ln(x, bp["ln1"], cfg.norm_eps)
+        sp = bp["self_attn"]
+        q = (h @ sp["wq"]).reshape(B, 1, cfg.n_heads, hd)
+        k = (h @ sp["wk"]).reshape(B, 1, cfg.n_kv_heads, hd)
+        v = (h @ sp["wv"]).reshape(B, 1, cfg.n_kv_heads, hd)
+        if cfg.qkv_bias:
+            q = q + sp["bq"].reshape(1, 1, cfg.n_heads, hd)
+            k = k + sp["bk"].reshape(1, 1, cfg.n_kv_heads, hd)
+            v = v + sp["bv"].reshape(1, 1, cfg.n_kv_heads, hd)
+        kc = lax.dynamic_update_slice_in_dim(kc, k, pos, axis=1)
+        vc = lax.dynamic_update_slice_in_dim(vc, v, pos, axis=1)
+        a = L.decode_attention(q, kc, vc, pos)
+        x = x + a.reshape(B, 1, -1) @ sp["wo"]
+
+        h = _ln(x, bp["ln2"], cfg.norm_eps)
+        cp = bp["cross_attn"]
+        q = (h @ cp["wq"]).reshape(B, 1, cfg.n_heads, hd)
+        if cfg.qkv_bias:
+            q = q + cp["bq"].reshape(1, 1, cfg.n_heads, hd)
+        a = L.decode_attention(q, xk, xv, jnp.asarray(xk.shape[1] - 1))
+        x = x + a.reshape(B, 1, -1) @ cp["wo"]
+
+        h = _ln(x, bp["ln3"], cfg.norm_eps)
+        x = x + L.mlp_block(bp["mlp"], h, "gelu")
+        return x, (kc, vc)
+
+    x, (nk, nv) = lax.scan(
+        body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    x = _ln(x, params["ln_dec"], cfg.norm_eps)
+    logits = (x @ params["embed"].T).astype(jnp.float32)
+    new = dict(cache)
+    new["k"], new["v"] = nk, nv
+    new["len"] = pos + 1
+    return logits, new

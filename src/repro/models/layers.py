@@ -1,0 +1,343 @@
+"""Core neural-net layers, pure-functional JAX (no flax).
+
+Conventions
+-----------
+* params are nested dicts of jnp arrays; an ``init_*`` returns params, an
+  ``apply``-style function takes ``(params, ...)``.
+* activations flow as (batch, seq, ...) unless noted.
+* attention uses a chunked online-softmax ("flash") formulation written in
+  plain ``lax.scan`` so it lowers on every backend with O(chunk^2) memory;
+  the Pallas kernel in ``repro.kernels.flash_attention`` is the TPU-optimized
+  drop-in for the same math (``repro.kernels.flash_attention.ops``).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .pspec import pbatch, pkv, pmodel
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in, d_out, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention ("flash" in plain XLA)
+# ---------------------------------------------------------------------------
+
+_NEG = -1e30
+_NO_WINDOW = 1 << 30
+
+
+def _chunk_sizes(s: int, want: int) -> int:
+    c = min(want, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+def _window_len(window):
+    """window may be None (static: no window), a python int, or a traced
+    int32 scalar where <= 0 means "no window" (lets hymba scan over layers
+    with per-layer window sizes)."""
+    if window is None:
+        return None
+    w = jnp.asarray(window, jnp.int32)
+    return jnp.where(w > 0, w, jnp.int32(_NO_WINDOW))
+
+
+def flash_attention(
+    q, k, v, *,
+    causal: bool = True,
+    window=None,
+    q_offset=0,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    logits_soft_cap: float = 0.0,
+):
+    """Chunked attention with online softmax.
+
+    q: (B, Sq, Hq, D);  k, v: (B, Skv, Hkv, D) with Hq % Hkv == 0 (GQA).
+    ``window`` > 0 restricts each query to the last ``window`` keys (SWA).
+    ``q_offset`` is the absolute position of q[0] (for chunked prefill).
+    Returns (B, Sq, Hq, D).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qc = _chunk_sizes(Sq, q_chunk)
+    kc = _chunk_sizes(Skv, kv_chunk)
+    nq, nk = Sq // qc, Skv // kc
+    scale = 1.0 / math.sqrt(D)
+
+    # (nq, B, qc, Hkv, G, D)
+    # NOTE: no sharding pins inside the attention loops — constraints here
+    # forced a per-tile reshard (measured ~1.3 GiB of all-gather per kv
+    # iteration on qwen1.5-110b: 20 TB/step scan-aware); GSPMD propagates
+    # the block-level batch/head sharding correctly on its own.
+    qs = q.reshape(B, nq, qc, Hkv, G, D).transpose(1, 0, 2, 3, 4, 5)
+    ks = k.reshape(B, nk, kc, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kc, Hkv, D).transpose(1, 0, 2, 3, 4)
+
+    q_off = jnp.asarray(q_offset, jnp.int32)
+    weff = _window_len(window)
+
+    @jax.checkpoint
+    def q_step(_, qi_qblk):
+        # checkpointed: persists only qblk per outer step; the inner kv scan's
+        # (m, l, acc) carries live transiently during this q-chunk's backward.
+        qi, qblk = qi_qblk
+        q_pos = q_off + qi * qc + jnp.arange(qc, dtype=jnp.int32)  # (qc,)
+
+        m0 = jnp.full((B, Hkv, G, qc), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, qc, D), jnp.float32)
+
+        @jax.checkpoint
+        def kv_step(carry, ki_kv):
+            # checkpointed: the backward pass recomputes each (qc x kc)
+            # score/prob tile instead of saving all nq*nk tiles — the
+            # flash-attention backward structure (68 GiB -> MBs at 32k).
+            m, l, acc = carry
+            ki, kblk, vblk = ki_kv
+            k_pos = ki * kc + jnp.arange(kc, dtype=jnp.int32)  # (kc,)
+            # (B, Hkv, G, qc, kc)
+            s = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", qblk, kblk,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            if logits_soft_cap:
+                s = logits_soft_cap * jnp.tanh(s / logits_soft_cap)
+            ok = jnp.ones((qc, kc), bool)
+            if causal:
+                ok &= q_pos[:, None] >= k_pos[None, :]
+            if weff is not None:
+                ok &= (q_pos[:, None] - k_pos[None, :]) < weff
+            s = jnp.where(ok, s, _NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk, dtype=jnp.int32), ks, vs),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,Hkv,G,qc,D)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, qc, Hq, D)
+        return None, out.astype(q.dtype)
+
+    _, outs = lax.scan(q_step, None, (jnp.arange(nq, dtype=jnp.int32), qs))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, Hq, D)
+
+
+def naive_attention(q, k, v, *, causal=True, window=None, q_offset=0):
+    """Materialized-scores oracle used by tests."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qr = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    q_pos = jnp.asarray(q_offset, jnp.int32) + jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    ok = jnp.ones((Sq, Skv), bool)
+    if causal:
+        ok &= q_pos[:, None] >= k_pos[None, :]
+    weff = _window_len(window)
+    if weff is not None:
+        ok &= (q_pos[:, None] - k_pos[None, :]) < weff
+    s = jnp.where(ok, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cur_pos, *, window=None):
+    """Single-token attention against a (possibly longer) cache.
+
+    q: (B, 1, Hq, D); caches: (B, S, Hkv, D); cur_pos: () int32 — 0-indexed
+    position of the current token (cache entries [0, cur_pos] are valid).
+    """
+    B, _, Hq, D = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    qr = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qr, k_cache,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    ok = pos[None, :] <= cur_pos
+    weff = _window_len(window)
+    if weff is not None:
+        ok &= pos[None, :] > (cur_pos - weff)
+    s = jnp.where(ok[:, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (GQA, rotary, optional bias, KV cache)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    return p
+
+
+def attention_qkv(p, cfg, x, positions):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(p, cfg, x, *, window=None, positions=None):
+    """Full-sequence (train / prefill) attention. Returns (out, (k, v))."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    q, k, v = attention_qkv(p, cfg, x, positions)
+    o = flash_attention(
+        q, k, v, causal=True, window=window,
+        q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+    )
+    return o.reshape(B, S, -1) @ p["wo"], (k, v)
+
+
+def attention_decode(p, cfg, x, cache, cur_pos, *, window=None):
+    """x: (B, 1, d); cache: dict(k=(B,S,Hkv,D), v=...); cur_pos: () int32
+    0-indexed position to write/attend. Returns out, new cache."""
+    B = x.shape[0]
+    positions = cur_pos * jnp.ones((B, 1), jnp.int32)
+    q, k, v = attention_qkv(p, cfg, x, positions)
+    kc = lax.dynamic_update_slice_in_dim(cache["k"], k, cur_pos, axis=1)
+    vc = lax.dynamic_update_slice_in_dim(cache["v"], v, cur_pos, axis=1)
+    o = decode_attention(q, kc, vc, cur_pos, window=window)
+    return o.reshape(B, 1, -1) @ p["wo"], {"k": kc, "v": vc}
+
+
+def attention_decode_slice(p, cfg, x, cache, cur_pos, *, window=None):
+    """Like attention_decode but returns the new (k, v) SLICES instead of
+    updated full caches, so a scan over layers emits O(B*Hkv*D) per layer
+    and the caller applies one in-place cache update outside the loop.
+
+    No sharding pin on the cache here: GSPMD picks a factored (H x D)
+    model-axis layout PartitionSpec cannot express; pinning D 16-ways
+    forced a full cache rematerialization per layer (~15 GiB/step)."""
+    B = x.shape[0]
+    positions = cur_pos * jnp.ones((B, 1), jnp.int32)
+    q, k, v = attention_qkv(p, cfg, x, positions)
+    kc = lax.dynamic_update_slice_in_dim(cache["k"], k, cur_pos, axis=1)
+    vc = lax.dynamic_update_slice_in_dim(cache["v"], v, cur_pos, axis=1)
+    o = decode_attention(q, kc, vc, cur_pos, window=window)
+    return o.reshape(B, 1, -1) @ p["wo"], (k, v)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU or GELU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model, d_ff, act, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"w1": dense_init(ks[0], d_model, d_ff, dtype),
+         "w2": dense_init(ks[1], d_ff, d_model, dtype)}
+    if act == "silu":  # SwiGLU gate
+        p["w3"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp_block(p, x, act: str):
+    if act == "silu":
+        h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    else:
+        h = jax.nn.gelu(x @ p["w1"])
+    return h @ p["w2"]

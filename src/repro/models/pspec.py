@@ -1,0 +1,113 @@
+"""Activation-sharding constraints for model internals.
+
+GSPMD propagation gives up inside chunked einsums (measured: mamba2 train
+replicated the batch dim over `data`, 53 GiB/device temp).  The fix is the
+standard one: explicit ``with_sharding_constraint`` pins on activations.
+
+Launchers set the ambient axes via ``set_axes(batch=...)`` *and* establish a
+mesh context (``jax.sharding.use_mesh``) around tracing; model code calls
+``pbatch(x, dim)`` / ``pmodel(x, dim)``.  With no axes set (unit tests,
+single-device runs) these are no-ops.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_BATCH_AXES: tuple | None = None
+_MODEL_AXIS: str | None = None
+_MODEL_SIZE: int = 1
+_SEQ_SHARD: bool = True  # sequence-parallel residual stream (layer carries)
+
+U = P.UNCONSTRAINED
+
+
+def set_axes(batch=None, model="model", model_size: int = 1,
+             seq_shard: bool = True):
+    global _BATCH_AXES, _MODEL_AXIS, _MODEL_SIZE, _SEQ_SHARD
+    _BATCH_AXES = tuple(batch) if batch else None
+    _MODEL_AXIS = model
+    _MODEL_SIZE = model_size
+    _SEQ_SHARD = seq_shard
+
+
+def clear_axes():
+    set_axes(None, None)
+
+
+@contextmanager
+def axes(batch=None, model="model", model_size: int = 1, seq_shard=True):
+    global _BATCH_AXES, _MODEL_AXIS, _MODEL_SIZE, _SEQ_SHARD
+    old = (_BATCH_AXES, _MODEL_AXIS, _MODEL_SIZE, _SEQ_SHARD)
+    set_axes(batch, model, model_size, seq_shard)
+    try:
+        yield
+    finally:
+        _BATCH_AXES, _MODEL_AXIS, _MODEL_SIZE, _SEQ_SHARD = old
+
+
+def _constrain(x, spec):
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def pbatch(x, dim: int = 0):
+    """Pin ``dim`` to the batch mesh axes; all other dims UNCONSTRAINED so
+    GSPMD keeps its tensor-parallel choices (None would force replication —
+    measured 244 GiB/device on qwen1.5-110b before this fix)."""
+    if _BATCH_AXES is None or x.ndim <= dim:
+        return x
+    spec = [U] * x.ndim
+    spec[dim] = _BATCH_AXES
+    return _constrain(x, spec)
+
+
+def pmodel(x, dim: int = 0):
+    """Pin dim to the model axis (others unconstrained)."""
+    if _BATCH_AXES is None or _MODEL_AXIS is None or x.ndim <= dim:
+        return x
+    spec = [U] * x.ndim
+    spec[dim] = _MODEL_AXIS
+    return _constrain(x, spec)
+
+
+def presidual(x):
+    """Residual stream (B, S, d) at layer-scan boundaries: batch over batch
+    axes + sequence over the model axis (sequence parallelism).  The scan
+    carry is what autodiff SAVES per layer, so S-sharding it divides the
+    dominant training-memory term by the model-axis size; XLA materializes
+    the implied all-gather (qkv) / reduce-scatter (wo) pair per layer."""
+    if _BATCH_AXES is None or x.ndim != 3:
+        return x
+    spec = [_BATCH_AXES, U, U]
+    if (_SEQ_SHARD and _MODEL_AXIS is not None
+            and x.shape[1] % max(_MODEL_SIZE, 1) == 0 and _MODEL_SIZE > 1):
+        spec[1] = _MODEL_AXIS
+    return _constrain(x, spec)
+
+
+def pexpert(x):
+    """MoE dispatch buffers (E, C, ...): E over model, capacity over the
+    batch axes (the EP x DP layout GSPMD misses on its own — measured
+    55 GiB/device on dbrx prefill without this)."""
+    if _BATCH_AXES is None or _MODEL_AXIS is None or x.ndim < 2:
+        return x
+    spec = [U] * x.ndim
+    if x.shape[0] % max(_MODEL_SIZE, 1) == 0 and _MODEL_SIZE > 1:
+        spec[0] = _MODEL_AXIS
+    spec[1] = _BATCH_AXES
+    return _constrain(x, spec)
+
+
+def pkv(x):
+    """Decode KV cache slice (B, S, H, D): batch over batch axes, head_dim
+    over model (D always divides; kv-head counts don't).  Keeps the
+    dynamic-update-slice local and the cache un-replicated in the scan."""
+    if _BATCH_AXES is None or x.ndim != 4:
+        return x
+    spec = [_BATCH_AXES, U, U, U]
+    if (_MODEL_AXIS is not None and _MODEL_SIZE > 1
+            and x.shape[3] % _MODEL_SIZE == 0):
+        spec[3] = _MODEL_AXIS
+    return _constrain(x, spec)

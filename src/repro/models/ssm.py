@@ -1,0 +1,189 @@
+"""Mamba-2 (SSD, state-space duality) block — chunked, MXU-friendly.
+
+Implements the ssd_minimal algorithm from arXiv:2405.21060 in chunked einsum
+form: within-chunk attention-like term + inter-chunk state recurrence carried
+by ``lax.scan``.  On TPU the chunked einsums map directly to the MXU; the
+recurrence is O(S/Q) sequential with tiny state, so XLA pipelines it well.
+
+Shapes: x (B, S, d_model); internal heads H with head dim P; state size N;
+B/C projections shared across ``G`` groups (analogous to GQA).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import dense_init, rms_norm
+from .pspec import pbatch
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_heads * cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return d_inner, conv_dim
+
+
+def init_ssm(key, cfg, dtype):
+    d = cfg.d_model
+    d_inner, conv_dim = ssm_dims(cfg)
+    H, N, G = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    ks = jax.random.split(key, 5)
+    return {
+        # in_proj -> [z, x, B, C, dt]
+        "in_proj": dense_init(ks[0], d, 2 * d_inner + 2 * G * N + H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(ks[2], d_inner, d, dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_inner, _ = ssm_dims(cfg)
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z, xbc, dt = jnp.split(proj, [d_inner, 2 * d_inner + 2 * G * N], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv1d along seq. xbc: (B,S,C), w: (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _segsum(a):
+    """Cumulative-sum decay matrix: out[..., i, j] = sum_{j<k<=i} a_k (lower-tri)."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    dif = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, dif, -jnp.inf)
+
+
+def ssm_block(p, cfg, x, initial_state=None):
+    """Full-sequence SSD. x: (B, S, d).
+
+    Returns (out, cache) where cache = {"state": final SSM state,
+    "conv": last (ssm_conv-1) raw pre-conv xbc values} so decoding can
+    continue seamlessly.
+    """
+    B_, S, _ = x.shape
+    H, N, G, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_head_dim
+    d_inner, _ = ssm_dims(cfg)
+    Q = min(cfg.ssm_chunk, S)
+    while S % Q:
+        Q -= 1
+    nc = S // Q
+
+    proj = pbatch(x @ p["in_proj"])
+    z, xbc_raw, dt_raw = _split_proj(cfg, proj)
+    conv_tail = xbc_raw[:, -(cfg.ssm_conv - 1):, :]
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xs, Bc, Cc = jnp.split(xbc, [d_inner, d_inner + G * N], axis=-1)
+
+    xs = xs.reshape(B_, S, H, P).astype(jnp.float32)
+    Bc = Bc.reshape(B_, S, G, N).astype(jnp.float32)
+    Cc = Cc.reshape(B_, S, G, N).astype(jnp.float32)
+    rep = H // G
+    Bh = jnp.repeat(Bc, rep, axis=2)  # (B,S,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=2)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,)
+    a = dt * A  # (B,S,H) log-decay per step
+    xdt = xs * dt[..., None]  # (B,S,H,P)
+
+    # chunk
+    def ch(t, extra=()):
+        return t.reshape((B_, nc, Q) + t.shape[2:])
+
+    a_c, x_c, B_ck, C_ck = ch(a), pbatch(ch(xdt)), pbatch(ch(Bh)), pbatch(ch(Ch))
+    a_cum = jnp.cumsum(a_c, axis=2)  # (B,nc,Q,H)
+    a_sum = a_cum[:, :, -1]  # (B,nc,H)
+
+    # --- within-chunk (diagonal) term ---
+    L = pbatch(jnp.exp(_segsum(a_c.transpose(0, 1, 3, 2))))  # (B,nc,H,Q,Q)
+    scores = pbatch(jnp.einsum("bclhn,bcshn->bchls", C_ck, B_ck)) * L
+    y_diag = pbatch(jnp.einsum("bchls,bcshp->bclhp", scores, x_c))
+
+    # --- chunk states ---
+    decay_end = jnp.exp(a_sum[:, :, None, :] - a_cum)  # (B,nc,Q,H)
+    states = pbatch(jnp.einsum("bcshn,bcsh,bcshp->bchpn", B_ck, decay_end, x_c))
+
+    # --- inter-chunk recurrence ---
+    s0 = (jnp.zeros((B_, H, P, N), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st_c, a_s = inp  # (B,H,P,N), (B,H)
+        prev = carry
+        new = prev * jnp.exp(a_s)[:, :, None, None] + st_c
+        return new, prev
+
+    final, prev_states = lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4), a_sum.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    # --- off-diagonal (cross-chunk) term ---
+    y_off = pbatch(jnp.einsum("bclhn,bchpn,bclh->bclhp",
+                              C_ck, prev_states, jnp.exp(a_cum)))
+
+    y = pbatch((y_diag + y_off).reshape(B_, S, H, P))
+    y = y + xs * p["D"][None, None, :, None]
+    y = y.reshape(B_, S, d_inner)
+    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                 p["norm_w"], cfg.norm_eps)
+    cache = {"state": final.astype(x.dtype), "conv": conv_tail}
+    return y @ p["out_proj"], cache
+
+
+def init_ssm_cache(cfg, batch, dtype):
+    d_inner, conv_dim = ssm_dims(cfg)
+    return {
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                            cfg.ssm_state), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+
+
+def ssm_decode(p, cfg, x, cache):
+    """Single-token SSD step. x: (B, 1, d). Returns (out, new cache)."""
+    B_ = x.shape[0]
+    H, N, G, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_head_dim
+    d_inner, conv_dim = ssm_dims(cfg)
+
+    proj = x[:, 0] @ p["in_proj"]  # (B, ...)
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+
+    # causal conv via rolling cache
+    conv_in = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # (B,K,C)
+    w = p["conv_w"]  # (K,C)
+    xbc = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_in.astype(jnp.float32),
+                                 w.astype(jnp.float32)) + p["conv_b"].astype(jnp.float32))
+    new_conv = conv_in[:, 1:].astype(cache["conv"].dtype)
+
+    xs, Bc, Cc = jnp.split(xbc, [d_inner, d_inner + G * N], axis=-1)
+    xs = xs.reshape(B_, H, P)
+    Bh = jnp.repeat(Bc.reshape(B_, G, N), H // G, axis=1)  # (B,H,N)
+    Ch = jnp.repeat(Cc.reshape(B_, G, N), H // G, axis=1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)  # (B,H)
+
+    st = cache["state"].astype(jnp.float32)
+    st = st * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, xs, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", st, Ch) + xs * p["D"][None, :, None]
+    y = y.reshape(B_, d_inner)
+    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                 p["norm_w"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"state": st.astype(cache["state"].dtype), "conv": new_conv}

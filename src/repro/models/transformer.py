@@ -1,0 +1,386 @@
+"""Decoder-only LM covering the dense / MoE / hybrid / SSM / VLM families.
+
+One parameter pytree per model; per-layer parameters are stacked on a leading
+``L`` axis and consumed with ``lax.scan`` so the lowered HLO is O(1) in depth
+(critical for 80-layer configs compiled on a single CPU core, and the natural
+form for FSDP weight gathering inside the loop).
+
+Public entry points
+-------------------
+init_lm(key, cfg)                         -> params
+forward_lm(params, cfg, batch)            -> (logits_f32, aux)
+loss_fn(params, cfg, batch)               -> (loss, metrics)
+init_cache(cfg, batch, max_len, dtype)    -> cache pytree
+prefill(params, cfg, batch)               -> (logits_last, cache)
+decode_step(params, cfg, token, cache)    -> (logits, cache)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import layers as L
+from . import moe as MOE
+from . import ssm as SSM
+from .pspec import pbatch, presidual
+
+# ---------------------------------------------------------------------------
+# per-layer structure helpers
+# ---------------------------------------------------------------------------
+
+
+def has_attn(cfg) -> bool:
+    return cfg.family != "ssm"
+
+
+def has_ssm(cfg) -> bool:
+    return cfg.family in ("ssm", "hybrid")
+
+
+def has_mlp(cfg) -> bool:
+    return cfg.family not in ("ssm",) and cfg.n_experts == 0
+
+
+def layer_windows(cfg) -> np.ndarray:
+    """(L,) int32; 0 => full attention, >0 => sliding window."""
+    w = np.zeros((cfg.n_layers,), np.int32)
+    if cfg.attn_window > 0:
+        w[:] = cfg.attn_window
+        for i in cfg.global_layers:
+            w[i % cfg.n_layers] = 0
+    return w
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg):
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    p = {"ln1": jnp.ones((d,), dt)}
+    if has_attn(cfg):
+        p["attn"] = L.init_attention(ks[0], cfg, dt)
+    if has_ssm(cfg):
+        p["ssm"] = SSM.init_ssm(ks[1], cfg, dt)
+    if cfg.n_experts:
+        p["ln2"] = jnp.ones((d,), dt)
+        p["moe"] = MOE.init_moe(ks[2], cfg, dt)
+    elif has_mlp(cfg) and cfg.d_ff > 0:
+        p["ln2"] = jnp.ones((d,), dt)
+        p["mlp"] = L.init_mlp(ks[3], d, cfg.d_ff, cfg.act, dt)
+    return p
+
+
+def init_lm(key, cfg):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    params = {
+        "embed": L.embed_init(ks[1], cfg.vocab, cfg.d_model, dt),
+        "blocks": jax.vmap(lambda k: init_block(k, cfg))(layer_keys),
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[2], cfg.d_model, cfg.vocab, dt)
+    if cfg.n_meta_tokens:
+        params["meta"] = (jax.random.normal(
+            ks[3], (cfg.n_meta_tokens, cfg.d_model), jnp.float32) * 0.02).astype(dt)
+    return params
+
+
+def count_params(params) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(params)))
+
+
+# ---------------------------------------------------------------------------
+# block application (full sequence)
+# ---------------------------------------------------------------------------
+
+
+def apply_block(bp, cfg, x, window, positions):
+    """One transformer block on a full sequence. Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    delta = 0.0
+    if has_attn(cfg):
+        a_out, _ = L.attention_block(bp["attn"], cfg, h, window=window,
+                                     positions=positions)
+        delta = delta + a_out
+    if has_ssm(cfg):
+        s_out, _ = SSM.ssm_block(bp["ssm"], cfg, h)
+        if has_attn(cfg):  # hybrid: mean-fuse the two parallel paths
+            delta = (delta + s_out) * 0.5
+        else:
+            delta = delta + s_out
+    x = x + delta
+    if "moe" in bp:
+        h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+        m_out, aux = MOE.moe_block(bp["moe"], cfg, h)
+        x = x + m_out
+    elif "mlp" in bp:
+        h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+        x = x + L.mlp_block(bp["mlp"], h, cfg.act)
+    return x, aux
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def _embed_input(params, cfg, batch):
+    """Assemble the input embedding sequence (meta/vision prefixes included).
+
+    batch: dict with "tokens" (B, S_text); VLM adds "img_embeds"
+    (B, n_img_tokens, d).  Returns (x (B, S_total, d), n_prefix).
+    """
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    x = params["embed"][tokens]
+    n_prefix = 0
+    if cfg.n_img_tokens:
+        img = batch["img_embeds"].astype(x.dtype)
+        x = jnp.concatenate([img, x], axis=1)
+        n_prefix += cfg.n_img_tokens
+    if cfg.n_meta_tokens:
+        meta = jnp.broadcast_to(params["meta"][None], (B,) + params["meta"].shape)
+        x = jnp.concatenate([meta, x], axis=1)
+        n_prefix += cfg.n_meta_tokens
+    return x, n_prefix
+
+
+def forward_hidden(params, cfg, batch):
+    """Full-sequence forward up to the final norm.
+
+    Returns (hidden (B, S_text, d), aux)."""
+    x, n_prefix = _embed_input(params, cfg, batch)
+    x = presidual(x)
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    windows = jnp.asarray(layer_windows(cfg))
+
+    def body(carry, xs):
+        x, aux = carry
+        bp, win = xs
+        x, a = apply_block(bp, cfg, x, win, positions)
+        return (presidual(x), aux + a), None
+
+    body = _remat(cfg, body)
+    (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                           (params["blocks"], windows))
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    return x, aux / cfg.n_layers
+
+
+def forward_lm(params, cfg, batch):
+    """Full-sequence forward. Returns (logits (B, S_text, V) f32, aux)."""
+    x, aux = forward_hidden(params, cfg, batch)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head).astype(jnp.float32)
+    return logits, aux
+
+
+def chunked_ce(x, head, labels, mask, chunk: int = 512):
+    """Cross entropy without materializing (B, S, V) logits: scan over
+    sequence chunks, recomputing each chunk's logits in the backward pass
+    (checkpointed scan body).  Essential at 150k vocab x 1M tokens."""
+    B, S, d = x.shape
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    n = S // c
+    xs = x.reshape(B, n, c, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n, c).transpose(1, 0, 2)
+    ms = mask.reshape(B, n, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        xc, lc, mc = inp
+        logits = pbatch((xc @ head).astype(jnp.float32))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return carry + ((logz - gold) * mc).sum(), None
+
+    xs, ls, ms = pbatch(xs, 1), pbatch(ls, 1), pbatch(ms, 1)
+    total, _ = lax.scan(body, jnp.zeros((), jnp.float32), (xs, ls, ms))
+    return total
+
+
+def loss_fn(params, cfg, batch, *, loss_chunk: int = 256):
+    """Causal-LM cross entropy (+ MoE aux). batch: tokens, labels[, mask]."""
+    x, aux = forward_hidden(params, cfg, batch)
+    labels = batch["labels"]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    nll = chunked_ce(x, head, labels, mask, loss_chunk)
+    loss = nll / jnp.maximum(mask.sum(), 1.0)
+    total = loss + cfg.router_aux_coef * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# KV / SSM cache, prefill, decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch, max_len, dtype=None):
+    """Cache pytree stacked over layers; max_len includes any prefix tokens."""
+    dt = dtype or _dtype(cfg)
+    Lc = cfg.n_layers
+    c = {"len": jnp.zeros((), jnp.int32)}
+    if has_attn(cfg):
+        hd = cfg.head_dim
+        c["k"] = jnp.zeros((Lc, batch, max_len, cfg.n_kv_heads, hd), dt)
+        c["v"] = jnp.zeros((Lc, batch, max_len, cfg.n_kv_heads, hd), dt)
+    if has_ssm(cfg):
+        d_inner, conv_dim = SSM.ssm_dims(cfg)
+        c["ssm_state"] = jnp.zeros(
+            (Lc, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), dt)
+        c["ssm_conv"] = jnp.zeros((Lc, batch, cfg.ssm_conv - 1, conv_dim), dt)
+    return c
+
+
+def decode_step(params, cfg, token, cache):
+    """token: (B, 1) int32. Returns (logits (B, 1, V) f32, new cache)."""
+    x = pbatch(params["embed"][token])  # (B,1,d)
+    pos = cache["len"]  # position to write
+    windows = jnp.asarray(layer_windows(cfg))
+
+    def body(carry, xs):
+        # cache-as-carry with in-place DUS per layer: the classic JAX KV
+        # cache idiom — while-loop carries get in-place dynamic updates,
+        # where cache-as-scan-xs/ys double-buffers (measured +16 GiB/dev).
+        x, kc_all, vc_all = carry
+        bp, win, li, st, cv = xs
+        h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+        delta = 0.0
+        new_st, new_cv = st, cv
+        if has_attn(cfg):
+            kc = lax.dynamic_index_in_dim(kc_all, li, 0, keepdims=False)
+            vc = lax.dynamic_index_in_dim(vc_all, li, 0, keepdims=False)
+            a_out, kv = L.attention_decode_slice(
+                bp["attn"], cfg, h, {"k": kc, "v": vc}, pos, window=win)
+            k_new, v_new = kv  # (B, 1, Hkv, D)
+            kc_all = lax.dynamic_update_slice(
+                kc_all, k_new[None], (li, 0, pos, 0, 0))
+            vc_all = lax.dynamic_update_slice(
+                vc_all, v_new[None], (li, 0, pos, 0, 0))
+            delta = delta + a_out
+        if has_ssm(cfg):
+            s_out, sc = SSM.ssm_decode(bp["ssm"], cfg, h,
+                                       {"state": st, "conv": cv})
+            new_st, new_cv = sc["state"], sc["conv"]
+            if has_attn(cfg):
+                delta = (delta + s_out) * 0.5
+            else:
+                delta = delta + s_out
+        x = x + delta
+        if "moe" in bp:
+            h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+            m_out, _ = MOE.moe_block(bp["moe"], cfg, h)
+            x = x + m_out
+        elif "mlp" in bp:
+            h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+            x = x + L.mlp_block(bp["mlp"], h, cfg.act)
+        return (x, kc_all, vc_all), (new_st, new_cv)
+
+    Lc = cfg.n_layers
+    dummy = jnp.zeros((Lc, 0), _dtype(cfg))
+    dummy2 = jnp.zeros((0,), _dtype(cfg))
+    kc = cache.get("k", dummy2)
+    vc = cache.get("v", dummy2)
+    st = cache.get("ssm_state", dummy)
+    cv = cache.get("ssm_conv", dummy)
+    lidx = jnp.arange(Lc, dtype=jnp.int32)
+
+    (x, nk, nv), (nst, ncv) = lax.scan(
+        body, (x, kc, vc), (params["blocks"], windows, lidx, st, cv))
+
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head).astype(jnp.float32)
+
+    new_cache = dict(cache)
+    if has_attn(cfg):
+        new_cache["k"], new_cache["v"] = nk, nv
+    if has_ssm(cfg):
+        new_cache["ssm_state"], new_cache["ssm_conv"] = nst, ncv
+    new_cache["len"] = cache["len"] + 1
+    return logits, new_cache
+
+
+def prefill(params, cfg, batch, max_len=None):
+    """Run the prompt through the model, building a decode cache.
+
+    Returns (last-position logits (B, V) f32, cache).
+    """
+    x, n_prefix = _embed_input(params, cfg, batch)
+    x = presidual(x)
+    B, S, _ = x.shape
+    max_len = max_len or S
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    windows = jnp.asarray(layer_windows(cfg))
+
+    def body(x, xs):
+        bp, win = xs
+        x = presidual(x)
+        h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+        delta = 0.0
+        kv = st = None
+        if has_attn(cfg):
+            a_out, kv = L.attention_block(bp["attn"], cfg, h, window=win,
+                                          positions=positions)
+            delta = delta + a_out
+        if has_ssm(cfg):
+            s_out, st = SSM.ssm_block(bp["ssm"], cfg, h)
+            delta = (delta + s_out) * 0.5 if has_attn(cfg) else delta + s_out
+        x = x + delta
+        if "moe" in bp:
+            hh = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+            m_out, _ = MOE.moe_block(bp["moe"], cfg, hh)
+            x = x + m_out
+        elif "mlp" in bp:
+            hh = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+            x = x + L.mlp_block(bp["mlp"], hh, cfg.act)
+        outs = {}
+        if kv is not None:
+            k, v = kv
+            pad = [(0, 0), (0, max_len - S), (0, 0), (0, 0)]
+            # pin the emitted cache slices to the batch axes: prefill's scan
+            # ys ARE the returned KV cache; without the pin XLA replicated
+            # them across the model axis on large cells.
+            outs["k"] = pbatch(jnp.pad(k, pad))
+            outs["v"] = pbatch(jnp.pad(v, pad))
+        if st is not None:
+            outs["ssm_state"] = st["state"]
+            outs["ssm_conv"] = st["conv"]
+        return x, outs
+
+    x, caches = lax.scan(body, x, (params["blocks"], windows))
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x[:, -1] @ head).astype(jnp.float32)
+
+    cache = init_cache(cfg, B, max_len)
+    for key in ("k", "v", "ssm_state", "ssm_conv"):
+        if key in caches:
+            cache[key] = caches[key].astype(cache[key].dtype)
+    cache["len"] = jnp.asarray(S, jnp.int32)
+    return logits, cache

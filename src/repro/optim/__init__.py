@@ -1,0 +1,2 @@
+from .adamw import adamw_init, adamw_update, cosine_lr, global_norm
+from .compression import compress_grads, decompress_grads, init_error_feedback

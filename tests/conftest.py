@@ -1,0 +1,5 @@
+import os
+
+# smoke tests and benches see the single real device; ONLY dryrun sets the
+# 512-device flag (per the multi-pod dry-run contract).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,91 @@
+"""Attention-semantics tests: sliding windows, hybrid layer mix, enc-dec
+decode consistency, chunked-prefill offsets."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import api as mapi
+from repro.models.layers import flash_attention, naive_attention
+from repro.models.transformer import layer_windows
+
+
+def test_window_changes_attention():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 16))
+    k = jax.random.normal(ks[1], (1, 64, 2, 16))
+    v = jax.random.normal(ks[2], (1, 64, 2, 16))
+    full = flash_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16)
+    win = flash_attention(q, k, v, causal=True, window=8,
+                          q_chunk=16, kv_chunk=16)
+    # early positions (< window) identical; late positions differ
+    np.testing.assert_allclose(full[:, :8], win[:, :8], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(full[:, -1], win[:, -1], atol=1e-3)
+
+
+def test_traced_window_matches_static():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 32, 2, 16))
+    k = jax.random.normal(ks[1], (1, 32, 1, 16))
+    v = jax.random.normal(ks[2], (1, 32, 1, 16))
+    out_static = naive_attention(q, k, v, causal=True, window=8)
+    out_traced = flash_attention(q, k, v, causal=True,
+                                 window=jnp.asarray(8, jnp.int32),
+                                 q_chunk=8, kv_chunk=8)
+    np.testing.assert_allclose(out_traced, out_static, rtol=1e-4, atol=1e-4)
+    # traced 0 => full attention
+    out0 = flash_attention(q, k, v, causal=True,
+                           window=jnp.asarray(0, jnp.int32),
+                           q_chunk=8, kv_chunk=8)
+    ref0 = naive_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out0, ref0, rtol=1e-4, atol=1e-4)
+
+
+def test_hymba_layer_windows():
+    cfg = get_config("hymba-1.5b")
+    w = layer_windows(cfg)
+    assert w.shape == (32,)
+    assert (w == 0).sum() == 3                       # 3 global layers
+    assert set(np.unique(w)) == {0, cfg.attn_window}
+    assert w[0] == 0 and w[15] == 0 and w[31] == 0
+
+
+def test_q_offset_chunked_prefill_equivalence():
+    """Attention over [0,S) == concat of two offset chunks with full KV."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    S = 32
+    q = jax.random.normal(ks[0], (1, S, 2, 16))
+    k = jax.random.normal(ks[1], (1, S, 2, 16))
+    v = jax.random.normal(ks[2], (1, S, 2, 16))
+    full = naive_attention(q, k, v, causal=True)
+    lo = flash_attention(q[:, :16], k[:, :16], v[:, :16], causal=True,
+                         q_chunk=8, kv_chunk=8)
+    hi = flash_attention(q[:, 16:], k, v, causal=True, q_offset=16,
+                         q_chunk=8, kv_chunk=8)
+    np.testing.assert_allclose(np.concatenate([lo, hi], 1), full,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_whisper_decode_matches_teacher_forcing():
+    cfg = get_config("whisper-base", smoke=True)
+    m = mapi.build(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 8
+    rng = np.random.default_rng(0)
+    batch = {
+        "enc_embeds": jnp.asarray(rng.standard_normal(
+            (B, cfg.enc_seq, cfg.d_model), dtype=np.float32)),
+        "tokens": jnp.asarray(rng.integers(1, cfg.vocab, (B, S)), jnp.int32),
+    }
+    logits_tf, _ = m.forward(params, batch)
+
+    _, cache = m.prefill(params, batch, max_len=S + 4)
+    outs = []
+    for t in range(S):
+        lg, cache = m.decode(params, batch["tokens"][:, t:t + 1], cache)
+        outs.append(lg)
+    logits_ar = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(logits_ar, np.float32),
+                               np.asarray(logits_tf, np.float32),
+                               rtol=0.08, atol=0.08)
