@@ -9,7 +9,7 @@ def main() -> None:
     from . import (fig1_bandwidth_over_time, fig2_weight_ratio,
                    fig4_std_vs_cores, fig5_partition_sweep,
                    fig6_traffic_trace, table1_resnet_layers)
-    from . import roofline_report
+    from . import roofline_report, serving_shaping
 
     print("name,us_per_call,derived")
     failures = []
@@ -21,6 +21,7 @@ def main() -> None:
         (fig5_partition_sweep, ("uniform",)),
         (fig5_partition_sweep, ("optimized",)),
         (fig6_traffic_trace, ()),
+        (serving_shaping, ()),
         (roofline_report, ()),
     ]:
         try:

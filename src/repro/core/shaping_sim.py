@@ -70,6 +70,23 @@ def tasks_from_traces(traces, batch: int, cores: int,
     return out
 
 
+def _bin_bw_samples(bw_samples, t_end: float, window: float):
+    """Resample (t_start, t_end, bytes/s) spans into fixed windows."""
+    edges = np.arange(0.0, t_end + window, window)
+    bw_win = np.zeros(max(len(edges) - 1, 1))
+    for (a, bnd, v) in bw_samples:
+        i0 = min(int(a / window), len(bw_win) - 1)
+        i1 = min(int(bnd / window), len(bw_win) - 1)
+        if i0 == i1:
+            bw_win[i0] += v * (bnd - a) / window
+        else:
+            bw_win[i0] += v * ((i0 + 1) * window - a) / window
+            for i in range(i0 + 1, i1):
+                bw_win[i] += v
+            bw_win[i1] += v * (bnd - i1 * window) / window
+    return edges, bw_win
+
+
 def maxmin_fair(demands: np.ndarray, cap: float) -> np.ndarray:
     """Max-min fair allocation of ``cap`` among flows wanting ``demands``."""
     alloc = np.zeros_like(demands)
@@ -200,18 +217,7 @@ def simulate(traces, *, partitions: int, total_batch: int,
         t += dt
 
     # resample into fixed windows
-    edges = np.arange(0.0, t + window, window)
-    bw_win = np.zeros(len(edges) - 1)
-    for (a, bnd, v) in bw_samples:
-        i0 = int(a / window)
-        i1 = min(int(bnd / window), len(bw_win) - 1)
-        if i0 == i1:
-            bw_win[i0] += v * (bnd - a) / window
-        else:
-            bw_win[i0] += v * ((i0 + 1) * window - a) / window
-            for i in range(i0 + 1, i1):
-                bw_win[i] += v
-            bw_win[i1] += v * (bnd - i1 * window) / window
+    edges, bw_win = _bin_bw_samples(bw_samples, t, window)
     # trim warmup/cooldown windows (first/last pass)
     lo = min(int(pass_time / window) + 1, max(len(bw_win) - 2, 0))
     hi = max(len(bw_win) - lo, lo + 1)
@@ -229,6 +235,87 @@ def simulate(traces, *, partitions: int, total_batch: int,
     return SimResult(time=centers, bw=bw_trim, images=images,
                      elapsed=t, passes=int(passes_done.min()),
                      steady_rate=steady)
+
+
+def simulate_tasks(tasklists: Sequence[Sequence[Task]], *,
+                   bandwidth: float = hw.KNL_MEM_BW,
+                   offsets: Sequence[float] | None = None,
+                   window: float | None = None,
+                   trim: float = 0.0) -> SimResult:
+    """Event-driven max-min-fair simulation of P partitions each executing a
+    FINITE per-partition task list exactly once.
+
+    This is the serving analogue of ``simulate``: instead of P copies of one
+    CNN layer trace looping for ``n_passes``, every partition gets its own
+    interleaved prefill/decode task sequence (built by ``repro.serving``),
+    so phase-staggered continuous batching can be validated with the same
+    Fig. 5 methodology (aggregate-bandwidth mean/std over time windows).
+
+    ``offsets`` are absolute start delays in seconds per partition.
+    ``window`` defaults to 1/400 of the longest unconstrained tasklist time.
+    ``trim`` drops windows within that many seconds of both ends before the
+    bw statistics (warmup/cooldown exclusion, as ``simulate`` does by pass).
+    """
+    P = len(tasklists)
+    off = np.asarray(offsets, float) if offsets is not None else np.zeros(P)
+    span = max(sum(t.dur for t in tl) for tl in tasklists)
+    if window is None:
+        window = max(span / 400.0, 1e-12)
+
+    idx = np.zeros(P, int)
+    n_tasks = np.array([len(tl) for tl in tasklists])
+    rem = np.array([tl[0].dur if len(tl) else 0.0 for tl in tasklists])
+    delay = off.copy()
+    done = idx >= n_tasks
+
+    t = 0.0
+    max_t = (span + off.max()) * (P + 2) * 3  # hard stop
+    bw_samples = []
+    while not done.all() and t < max_t:
+        running = (~done) & (delay <= 1e-15)
+        demands = np.array([tasklists[p][idx[p]].demand if running[p] else 0.0
+                            for p in range(P)])
+        alloc = maxmin_fair(demands, bandwidth)
+        speed = np.ones(P)
+        dt_candidates = []
+        for p in range(P):
+            if done[p]:
+                continue
+            if not running[p]:
+                dt_candidates.append(delay[p])
+            else:
+                if demands[p] > 0:
+                    speed[p] = min(1.0, alloc[p] / demands[p])
+                if speed[p] > 1e-12:
+                    dt_candidates.append(rem[p] / speed[p])
+                else:
+                    dt_candidates.append(np.inf)
+        dt = max(min(dt_candidates), 1e-15)
+        bw_samples.append((t, t + dt, float(alloc[running].sum())))
+
+        for p in range(P):
+            if done[p]:
+                continue
+            if not running[p]:
+                delay[p] -= dt
+            else:
+                rem[p] -= dt * speed[p]
+                if rem[p] <= 1e-12:
+                    idx[p] += 1
+                    if idx[p] >= n_tasks[p]:
+                        done[p] = True
+                    else:
+                        rem[p] = tasklists[p][idx[p]].dur
+        t += dt
+
+    edges, bw_win = _bin_bw_samples(bw_samples, t, window)
+    centers = (edges[:-1] + window / 2) if len(edges) > 1 else np.zeros(1)
+    if trim > 0:
+        keep = (centers > trim) & (centers < t - trim)
+        if keep.sum() >= 4:
+            centers, bw_win = centers[keep], bw_win[keep]
+    return SimResult(time=centers, bw=bw_win, images=int(n_tasks.sum()),
+                     elapsed=t, passes=1)
 
 
 def partition_sweep(traces, partitions_list, *, total_batch: int = 64,

@@ -259,3 +259,25 @@ def lm_layer_traces(cfg: ModelConfig, seq: int, dtype_bytes: int = 2):
                           cfg.vocab * d * dtype_bytes,
                           act + seq * cfg.vocab * 4))
     return out
+
+
+def decode_kv_bytes(cfg: ModelConfig, ctx: int, dtype_bytes: int = 2) -> float:
+    """Per-sequence cache bytes touched by ONE decode step: the whole KV
+    cache (or SSM state) is re-read every token, which is what makes decode
+    the bandwidth-bound serving phase (the BN analogue for LM scheduling)."""
+    L = cfg.n_layers
+    by = 0.0
+    if cfg.family != "ssm":
+        hd = cfg.head_dim
+        if cfg.attn_window:
+            full = len(cfg.global_layers)
+            w_eff = min(cfg.attn_window, ctx)
+            eff_ctx = full * ctx + (L - full) * w_eff
+        else:
+            eff_ctx = L * ctx
+        by += 2.0 * cfg.n_kv_heads * hd * dtype_bytes * eff_ctx
+    if cfg.family in ("ssm", "hybrid"):
+        # recurrent state read + write per layer
+        by += 2.0 * L * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state \
+            * dtype_bytes
+    return by

@@ -17,7 +17,11 @@ happen only at sync points.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 exposes explicit axis types
+    from jax.sharding import AxisType
+except ImportError:  # older jax: every mesh axis is implicitly "auto"
+    AxisType = None
 
 POD_CHIPS = 256          # 16 x 16 v5e pod slice
 DATA_AXIS = 16
@@ -26,8 +30,18 @@ N_PODS = 2
 
 
 def _mk(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
     return jax.make_mesh(
         shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def mesh_context(mesh):
+    """Ambient-mesh context manager across jax versions: ``jax.set_mesh``
+    where it exists, else the legacy ``Mesh``-as-context-manager form."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False, partitions: int = 1):

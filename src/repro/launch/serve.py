@@ -1,98 +1,119 @@
-"""Batched serving driver: prefill + decode loop with slot-based continuous
-batching (a finished sequence's slot is refilled from the request queue).
+"""Serving CLI: thin driver over the ``repro.serving`` engine.
+
+P partition engines (the paper's compute-unit partitions, applied to one
+serving device) run phase-staggered continuous batching under the
+traffic-shaping scheduler; each partition gets 1/P of the compute while all
+share one HBM pipe.  Prints throughput, latency percentiles, the aggregate
+bandwidth-demand std, and the fluid-simulation validation of the shaping
+claim (P staggered vs P=1 synchronous on the identical request load).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
-      --requests 12 --batch 4 --prompt-len 32 --gen 16
+      --partitions 4 --stagger demand
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core import hw
 from repro.models import api as mapi
+from repro.serving import (PartitionEngine, PhaseStaggeredScheduler,
+                           RequestQueue, decode_cost, prefill_cost,
+                           serving_trace_report)
+from repro.serving.trace_sim import phase_balanced_bandwidth
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4, help="decode slots")
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode slots per partition")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--greedy", action="store_true", default=True)
+    ap.add_argument("--partitions", type=int, default=1)
+    ap.add_argument("--stagger", default="uniform",
+                    choices=["none", "uniform", "demand"])
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission control: max queued requests")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request completion deadline (virtual s)")
+    ap.add_argument("--no-sim", action="store_true",
+                    help="skip the serving-trace shaping validation")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
-    api = mapi.build(cfg)
-    params = api.init(jax.random.PRNGKey(0))
-    max_len = args.prompt_len + args.gen + (cfg.n_meta_tokens or 0) + \
+    if args.partitions < 1 or args.batch < 1:
+        ap.error("--partitions and --batch must be >= 1")
+    P = args.partitions
+    slots = args.batch
+    peak_per_part = hw.TPU_PEAK_FLOPS / P  # partitions split one device
+    max_len = args.prompt_len + 4 * args.gen + (cfg.n_meta_tokens or 0) + \
         (cfg.n_img_tokens or 0)
 
+    # --- request load + admission control ---
+    def estimate(req):
+        pre = prefill_cost(cfg, slots, req.prompt_len, peak_per_part)
+        dec = decode_cost(cfg, slots, req.prompt_len + args.gen // 2,
+                          peak_per_part)
+        return pre.duration + req.max_new_tokens * dec.duration
+
+    queue = RequestQueue(max_depth=args.max_queue, service_estimate=estimate)
     rng = np.random.default_rng(0)
-    queue = [rng.integers(1, cfg.vocab, size=(args.prompt_len,))
-             .astype(np.int32) for _ in range(args.requests)]
+    for _ in range(args.requests):
+        queue.submit(rng.integers(1, cfg.vocab, size=(args.prompt_len,))
+                     .astype(np.int32), args.gen, arrival=0.0,
+                     deadline=args.deadline)
 
-    B = args.batch
-    decode = jax.jit(api.decode, donate_argnums=(2,))
+    # --- engines: in-process the (read-only) params are aliased; real
+    # deployments replicate per partition (core.partitioning prices that) ---
+    api = mapi.build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    decode_fn = jax.jit(api.decode, donate_argnums=(2,))
+    prefill_fn = jax.jit(lambda p, b: api.prefill(p, b, max_len=max_len))
+    engines = [PartitionEngine(cfg, api, params, slots=slots,
+                               max_len=max_len, pid=p,
+                               peak_flops=peak_per_part,
+                               decode_fn=decode_fn, prefill_fn=prefill_fn)
+               for p in range(P)]
 
-    # --- prefill the first B requests as one batch ---
-    def make_batch(prompts):
-        b = {"tokens": jnp.asarray(np.stack(prompts))}
-        if cfg.n_img_tokens:
-            b["img_embeds"] = jnp.zeros((len(prompts), cfg.n_img_tokens,
-                                         cfg.d_model), jnp.float32)
-        if cfg.family == "encdec":
-            b["enc_embeds"] = jnp.asarray(rng.standard_normal(
-                (len(prompts), cfg.enc_seq, cfg.d_model), dtype=np.float32))
-        return b
+    # pipe sized inside the load's phase dynamic range (see trace_sim);
+    # smoke-scale models put both phases past the physical HBM number
+    bandwidth = phase_balanced_bandwidth(
+        cfg, total_slots=P * slots, prompt_len=args.prompt_len, gen=args.gen)
+    sched = PhaseStaggeredScheduler(engines, queue, policy=args.stagger,
+                                    bandwidth=bandwidth)
+    m = sched.run()
+    s = m.summary()
+    print(f"serve: {cfg.name} P={P} stagger={args.stagger} "
+          f"slots={P}x{slots} completed={s['requests_completed']}"
+          f"/{queue.n_submitted} rejected={queue.n_rejected}")
+    print(f"  throughput: {s['tok_per_s_virtual']:.1f} tok/s (virtual) "
+          f"{s['tok_per_s_wall']:.1f} tok/s (wall)")
+    print(f"  ttft p50={s['ttft_p50']*1e3:.3g}ms p95={s['ttft_p95']*1e3:.3g}ms"
+          f"  tpot p50={s['tpot_p50']*1e6:.3g}us"
+          f"  deadline_misses={s['deadline_misses']}")
+    print(f"  bw demand: mean={s['bw_demand_mean']/1e9:.1f} GB/s "
+          f"std={s['bw_demand_std']/1e9:.2f} GB/s "
+          f"(pipe {bandwidth/1e9:.0f} GB/s)")
 
-    active = [queue.pop(0) for _ in range(min(B, len(queue)))]
-    while len(active) < B:
-        active.append(np.zeros(args.prompt_len, np.int32))
-    t0 = time.time()
-    logits, cache = api.prefill(params, make_batch(active), max_len=max_len)
-    t_prefill = time.time() - t0
+    if not args.no_sim:
+        rep = serving_trace_report(
+            cfg, partitions=P, policy=args.stagger, total_slots=P * slots,
+            n_requests=max(args.requests, P), prompt_len=args.prompt_len,
+            gen=args.gen, bandwidth=bandwidth)
+        print(f"  sim: P={P} {args.stagger} bw_std={rep['bw_std']/1e9:.2f} "
+              f"GB/s vs P=1 sync {rep['base_bw_std']/1e9:.2f} GB/s "
+              f"(x{rep['std_rel']:.2f}, bw_mean x{rep['mean_rel']:.2f}, "
+              f"perf x{rep['perf_rel']:.2f})")
 
-    if logits is None:  # encdec: decoder starts from BOS
-        last_tok = jnp.ones((B, 1), jnp.int32)
-    else:
-        last_tok = jnp.argmax(logits, axis=-1).reshape(B, 1).astype(jnp.int32)
-
-    # --- decode loop with slot refill accounting ---
-    done_tokens = 0
-    outputs = [[] for _ in range(B)]
-    remaining = np.full(B, args.gen)
-    completed = 0
-    t0 = time.time()
-    while completed < args.requests and remaining.max() > 0:
-        logits, cache = decode(params, last_tok, cache)
-        last_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        done_tokens += B
-        remaining -= 1
-        for i in np.nonzero(remaining == 0)[0]:
-            completed += 1
-            if queue:
-                # continuous batching: hand the slot to the next request.
-                # (cache rewind per-slot is arch-dependent; here the slot
-                # restarts at the shared prefix boundary)
-                queue.pop(0)
-                remaining[i] = args.gen
-            else:
-                remaining[i] = -(1 << 30)
-        for i in range(B):
-            outputs[i].append(int(np.asarray(last_tok)[i, 0]))
-    t_decode = time.time() - t0
-
-    print(f"serve: {cfg.name} slots={B} prefill={t_prefill*1e3:.0f}ms "
-          f"decode={done_tokens/max(t_decode,1e-9):.1f} tok/s "
-          f"completed={completed}/{args.requests}")
-    return outputs
+    # per-slot token streams across all partitions (driver contract)
+    outs = [toks for eng in engines for toks in eng.slot_tokens]
+    return outs
 
 
 if __name__ == "__main__":

@@ -14,7 +14,11 @@ Recovery flow on failure:
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5; remesh plans carry explicit axis types there
+    from jax.sharding import AxisType  # noqa: F401
+except ImportError:  # older jax: axis types are implicit, plans still valid
+    AxisType = None
 
 from repro.launch import sharding as SH
 

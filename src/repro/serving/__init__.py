@@ -1,0 +1,24 @@
+"""Partition-asynchronous serving engine.
+
+The paper's traffic-shaping idea applied to LM serving: P partition engines
+(``engine.PartitionEngine``) run phase-staggered continuous batching under
+``scheduler.PhaseStaggeredScheduler`` so compute-bound prefill and
+bandwidth-bound decode interleave across partitions instead of aligning.
+``queue`` handles admission/deadlines, ``metrics`` the observables, and
+``trace_sim`` validates the std-reduction claim with the Fig. 5 fluid
+simulation.
+"""
+from repro.serving.engine import (EngineBase, PartitionEngine, PhaseCost,
+                                  SimulatedEngine, decode_cost, prefill_cost)
+from repro.serving.metrics import ServingMetrics
+from repro.serving.queue import Request, RequestQueue
+from repro.serving.scheduler import (POLICIES, PhaseStaggeredScheduler,
+                                     TickRecord)
+from repro.serving.trace_sim import serving_tasklists, serving_trace_report
+
+__all__ = [
+    "EngineBase", "PartitionEngine", "PhaseCost", "SimulatedEngine",
+    "decode_cost", "prefill_cost", "ServingMetrics", "Request",
+    "RequestQueue", "POLICIES", "PhaseStaggeredScheduler", "TickRecord",
+    "serving_tasklists", "serving_trace_report",
+]

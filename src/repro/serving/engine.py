@@ -1,0 +1,307 @@
+"""Per-partition inference engine: params, KV-cache slots, prefill/decode.
+
+An engine is one traffic-shaping partition of the serving fleet.  It owns
+``slots`` concurrent sequences sharing a batched KV cache built through
+``repro.models.api``, and exposes exactly two steppable phases to the
+scheduler:
+
+  * ``prefill_wave()`` — compute-bound: run the prompt batch through the
+    model, building a fresh cache and emitting each request's first token;
+  * ``decode_step()``  — bandwidth-bound: one token for every active slot
+    (the whole KV cache streams from HBM per step).
+
+Continuous batching: when a slot's request completes mid-wave, the next
+backlog request takes the slot immediately at the shared-prefix boundary
+(the seed driver's refill rule; true per-slot cache rewind is roadmap work),
+provided the remaining cache budget fits its token budget.  Refill is FIFO,
+so request ordering is preserved.
+
+Phase costs (FLOPs / bytes / duration / bandwidth demand) come from the
+analytic LM traces in ``repro.core.traffic`` — the same per-layer
+(FLOPs, bytes) decomposition the paper's simulator consumes — so the
+scheduler's ``demand`` policy and the serving-trace validation in
+``core.shaping_sim.simulate_tasks`` price phases identically.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import List, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import hw
+from repro.core.shaping_sim import KIND_EFF
+from repro.core.traffic import decode_kv_bytes, lm_layer_traces
+from repro.serving.queue import Request
+
+
+# ---------------------------------------------------------------------------
+# analytic phase costs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PhaseCost:
+    flops: float
+    byts: float
+    duration: float   # seconds at the partition's achieved compute rate
+
+    @property
+    def demand(self) -> float:
+        """Bytes/s wanted while the phase runs (unconstrained)."""
+        return self.byts / max(self.duration, 1e-15)
+
+
+@lru_cache(maxsize=None)
+def _traces(cfg: ModelConfig, seq: int, dtype_bytes: int) -> tuple:
+    """Memoized per-layer traces: cost estimates run every scheduler tick,
+    and the trace list is a pure function of a frozen config."""
+    return tuple(lm_layer_traces(cfg, seq, dtype_bytes))
+
+
+def _cost_from_traces(traces, batch: int, peak_flops: float,
+                      extra_bytes: float = 0.0) -> PhaseCost:
+    fl = by = dur = 0.0
+    for tr in traces:
+        eff = KIND_EFF.get(tr.kind, 0.4)
+        f = tr.flops_per_img * batch
+        fl += f
+        by += tr.weight_bytes + tr.act_bytes_per_img * batch
+        dur += f / (peak_flops * eff)
+    return PhaseCost(fl, by + extra_bytes, max(dur, 1e-15))
+
+
+def prefill_cost(cfg: ModelConfig, batch: int, prompt_len: int,
+                 peak_flops: float = hw.TPU_PEAK_FLOPS,
+                 dtype_bytes: int = 2) -> PhaseCost:
+    """One prefill wave of ``batch`` prompts (compute-bound phase)."""
+    return _cost_from_traces(_traces(cfg, prompt_len, dtype_bytes),
+                             batch, peak_flops)
+
+
+def decode_cost(cfg: ModelConfig, batch: int, ctx: int,
+                peak_flops: float = hw.TPU_PEAK_FLOPS,
+                dtype_bytes: int = 2) -> PhaseCost:
+    """One decode step over ``batch`` slots at context ``ctx`` — the
+    KV-cache read makes this the bandwidth-bound phase."""
+    kv = decode_kv_bytes(cfg, ctx, dtype_bytes) * batch
+    return _cost_from_traces(_traces(cfg, 1, dtype_bytes),
+                             batch, peak_flops, extra_bytes=kv)
+
+
+# ---------------------------------------------------------------------------
+# engine base: slot/backlog state machine (model-execution agnostic)
+# ---------------------------------------------------------------------------
+
+
+class EngineBase:
+    """Slot bookkeeping shared by the real and the simulated engine.
+
+    Scheduler-facing surface:
+      assign(requests)   — extend this partition's FIFO backlog
+      wants_prefill      — drained of active work but has backlog
+      busy               — at least one active slot
+      prefill_wave(now)  -> PhaseCost   (only when wants_prefill)
+      decode_step(now)   -> PhaseCost   (only when busy)
+    """
+
+    def __init__(self, cfg: ModelConfig, *, slots: int, max_len: int,
+                 pid: int = 0, peak_flops: float = hw.TPU_PEAK_FLOPS):
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.pid = pid
+        self.peak_flops = peak_flops
+        self.backlog: List[Request] = []
+        self.active: List[Optional[Request]] = [None] * slots
+        self.pos = 0                      # shared cache write position
+        self.assign_order: List[int] = []  # rids in service order (tests)
+        self.slot_tokens: List[List[int]] = [[] for _ in range(slots)]
+        self.n_prefills = 0
+        self.n_decode_steps = 0
+        self.completed: List[Request] = []
+
+    # -- scheduler predicates ------------------------------------------------
+    @property
+    def busy(self) -> bool:
+        return any(r is not None for r in self.active)
+
+    @property
+    def wants_prefill(self) -> bool:
+        return (not self.busy) and bool(self.backlog)
+
+    @property
+    def idle(self) -> bool:
+        return not self.busy and not self.backlog
+
+    def assign(self, requests: List[Request]) -> None:
+        self.backlog.extend(requests)
+
+    # -- cost estimates (used by the demand policy) --------------------------
+    def prefill_cost_est(self) -> PhaseCost:
+        n = min(self.slots, max(len(self.backlog), 1))
+        plen = self.backlog[0].prompt_len if self.backlog else self.max_len // 2
+        return prefill_cost(self.cfg, n, plen, self.peak_flops)
+
+    def decode_cost_est(self) -> PhaseCost:
+        n = sum(r is not None for r in self.active) or self.slots
+        ctx = max(self.pos, 1)
+        return decode_cost(self.cfg, n, ctx, self.peak_flops)
+
+    # -- phase execution -----------------------------------------------------
+    def prefill_wave(self, now: float) -> PhaseCost:
+        assert self.wants_prefill, "prefill_wave() on a busy/idle engine"
+        wave = self.backlog[:self.slots]
+        self.backlog = self.backlog[self.slots:]
+        if len({r.prompt_len for r in wave}) > 1:
+            # the dense per-wave cache requires one prompt length; ragged
+            # prompts need paged KV (see ROADMAP repro.serving open items)
+            raise ValueError(
+                "mixed prompt lengths in one prefill wave: "
+                f"{sorted({r.prompt_len for r in wave})}")
+        cost = prefill_cost(self.cfg, len(wave), wave[0].prompt_len,
+                            self.peak_flops)
+        self.pos = wave[0].prompt_len
+        first = self._run_prefill(wave)
+        t_end = now + cost.duration
+        for i, req in enumerate(wave):
+            self.active[i] = req
+            self.assign_order.append(req.rid)
+            if first is not None:  # prefill emits the first token
+                req.tokens.append(int(first[i]))
+                self.slot_tokens[i].append(int(first[i]))
+                req.t_first_token = t_end
+        for i in range(len(wave), self.slots):
+            self.active[i] = None
+        self.n_prefills += 1
+        self._finish_done(t_end)
+        return cost
+
+    def decode_step(self, now: float) -> PhaseCost:
+        assert self.busy, "decode_step() on an engine with no active slots"
+        n_active = sum(r is not None for r in self.active)
+        cost = decode_cost(self.cfg, n_active, max(self.pos, 1),
+                           self.peak_flops)
+        toks = self._run_decode()
+        self.pos += 1
+        t_end = now + cost.duration
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.tokens.append(int(toks[i]))
+            self.slot_tokens[i].append(int(toks[i]))
+            if req.t_first_token is None:
+                req.t_first_token = t_end
+        self.n_decode_steps += 1
+        self._finish_done(t_end)
+        return cost
+
+    def _finish_done(self, t_end: float) -> None:
+        """Retire finished requests; FIFO slot refill at the shared-prefix
+        boundary when the remaining cache budget covers the newcomer."""
+        for i, req in enumerate(self.active):
+            if req is None or not req.done:
+                continue
+            req.t_done = t_end
+            self.completed.append(req)
+            self.active[i] = None
+            if (self.backlog
+                    and self.pos + self.backlog[0].max_new_tokens
+                    <= self.max_len):
+                nxt = self.backlog.pop(0)
+                self.active[i] = nxt
+                self.assign_order.append(nxt.rid)
+
+    # -- model-execution hooks ----------------------------------------------
+    def _run_prefill(self, wave: List[Request]):
+        """Returns per-slot first tokens (len(wave),) or None."""
+        raise NotImplementedError
+
+    def _run_decode(self):
+        """Returns per-slot next tokens (slots,)."""
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# real engine (jax, via models.api) and the execution-free simulated engine
+# ---------------------------------------------------------------------------
+
+
+class PartitionEngine(EngineBase):
+    """Runs the actual model.  ``params`` may be shared across engines
+    in-process (they are read-only during serving); on hardware each
+    partition holds its own replica — the paper's reuse-vs-shaping tradeoff,
+    priced by ``core.partitioning.weight_replica_bytes``."""
+
+    def __init__(self, cfg: ModelConfig, api, params, *, slots: int,
+                 max_len: int, pid: int = 0,
+                 peak_flops: float = hw.TPU_PEAK_FLOPS, seed: int = 0,
+                 decode_fn=None, prefill_fn=None):
+        super().__init__(cfg, slots=slots, max_len=max_len, pid=pid,
+                         peak_flops=peak_flops)
+        import jax
+
+        self.api = api
+        self.params = params
+        # engines may share jitted phase fns (same shapes -> one executable)
+        self._decode_fn = decode_fn or jax.jit(api.decode, donate_argnums=(2,))
+        self._prefill_fn = prefill_fn or (
+            lambda p, b: api.prefill(p, b, max_len=max_len))
+        self.cache = None
+        self._last_tok = None
+        self._rng = np.random.default_rng(seed + pid)
+
+    def _make_batch(self, prompts: List[np.ndarray]) -> dict:
+        import jax.numpy as jnp
+
+        cfg = self.cfg
+        stack = np.stack([np.asarray(p, np.int32) for p in prompts])
+        b = {"tokens": jnp.asarray(stack)}
+        if cfg.n_img_tokens:
+            b["img_embeds"] = jnp.zeros(
+                (len(prompts), cfg.n_img_tokens, cfg.d_model), jnp.float32)
+        if cfg.family == "encdec":
+            b["enc_embeds"] = jnp.asarray(self._rng.standard_normal(
+                (len(prompts), cfg.enc_seq, cfg.d_model), dtype=np.float32))
+        return b
+
+    def _run_prefill(self, wave: List[Request]):
+        import jax.numpy as jnp
+
+        prompts = [r.prompt for r in wave]
+        plen = len(prompts[0])
+        # pad the wave to full slot width so cache/batch shapes are stable
+        # across waves (one compiled executable per engine)
+        while len(prompts) < self.slots:
+            prompts.append(np.zeros(plen, np.int32))
+        logits, self.cache = self._prefill_fn(
+            self.params, self._make_batch(prompts))
+        if logits is None:  # encdec: decoder starts from BOS
+            self._last_tok = jnp.ones((self.slots, 1), jnp.int32)
+            return None
+        self._last_tok = jnp.argmax(logits, axis=-1).reshape(
+            self.slots, 1).astype(jnp.int32)
+        return np.asarray(self._last_tok)[:, 0]
+
+    def _run_decode(self):
+        import jax.numpy as jnp
+
+        logits, self.cache = self._decode_fn(self.params, self._last_tok,
+                                             self.cache)
+        self._last_tok = jnp.argmax(logits, axis=-1).astype(
+            jnp.int32).reshape(self.slots, 1)
+        return np.asarray(self._last_tok)[:, 0]
+
+
+class SimulatedEngine(EngineBase):
+    """Same slot/backlog/phase state machine, no model execution: tokens are
+    synthetic.  Used by scheduler unit tests and the partitions x policy
+    benchmark sweep, where only phase timing and bandwidth demand matter."""
+
+    def _run_prefill(self, wave):
+        return np.arange(len(wave)) + 1
+
+    def _run_decode(self):
+        return np.full(self.slots, 1 + (self.n_decode_steps % 7))

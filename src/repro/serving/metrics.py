@@ -1,0 +1,100 @@
+"""Serving observables: per-tick bandwidth demand + request latencies.
+
+The tick trace is the serving analogue of the paper's Fig. 1 bandwidth
+curve: aggregate *unconstrained* HBM demand of all partitions per scheduler
+tick, time-weighted.  Its mean/std are the shaping metrics the stagger
+policies are judged on; TTFT/TPOT/throughput are the serving-quality side
+of the tradeoff.  All times are virtual seconds on the scheduler clock.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.serving.queue import Request
+
+
+@dataclass
+class ServingMetrics:
+    ticks: List[Tuple[float, float, float]] = field(default_factory=list)
+    # (t_start, dt, aggregate_demand_bytes_per_s)
+    requests: List[Request] = field(default_factory=list)
+    wall_seconds: float = 0.0
+    virtual_seconds: float = 0.0
+
+    def observe_tick(self, t: float, dt: float, demand: float) -> None:
+        self.ticks.append((t, dt, demand))
+
+    def observe_request(self, req: Request) -> None:
+        self.requests.append(req)
+
+    # -- bandwidth-demand statistics (time-weighted over ticks) -------------
+    def _weighted(self) -> Tuple[np.ndarray, np.ndarray]:
+        if not self.ticks:
+            return np.zeros(1), np.ones(1)
+        arr = np.asarray(self.ticks)
+        return arr[:, 2], np.maximum(arr[:, 1], 1e-15)
+
+    @property
+    def bw_demand_mean(self) -> float:
+        v, w = self._weighted()
+        return float(np.average(v, weights=w))
+
+    @property
+    def bw_demand_std(self) -> float:
+        v, w = self._weighted()
+        m = np.average(v, weights=w)
+        return float(np.sqrt(np.average((v - m) ** 2, weights=w)))
+
+    # -- latency / throughput ----------------------------------------------
+    def _done(self) -> List[Request]:
+        return [r for r in self.requests if r.t_done is not None]
+
+    def ttft(self) -> np.ndarray:
+        return np.asarray([r.t_first_token - r.arrival for r in self._done()
+                           if r.t_first_token is not None])
+
+    def tpot(self) -> np.ndarray:
+        """Per-request mean time per output token after the first."""
+        out = []
+        for r in self._done():
+            n = len(r.tokens)
+            if n > 1 and r.t_first_token is not None:
+                out.append((r.t_done - r.t_first_token) / (n - 1))
+        return np.asarray(out)
+
+    def percentiles(self, arr: np.ndarray, ps=(50, 95)) -> Dict[str, float]:
+        if len(arr) == 0:
+            return {f"p{p}": float("nan") for p in ps}
+        return {f"p{p}": float(np.percentile(arr, p)) for p in ps}
+
+    @property
+    def completed_tokens(self) -> int:
+        return int(sum(len(r.tokens) for r in self._done()))
+
+    @property
+    def deadline_misses(self) -> int:
+        return sum(1 for r in self._done()
+                   if r.deadline is not None and r.t_done > r.deadline)
+
+    def throughput(self, wall: bool = False) -> float:
+        den = self.wall_seconds if wall else self.virtual_seconds
+        return self.completed_tokens / max(den, 1e-12)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "requests_completed": len(self._done()),
+            "tokens": self.completed_tokens,
+            "virtual_s": self.virtual_seconds,
+            "tok_per_s_virtual": self.throughput(),
+            "tok_per_s_wall": self.throughput(wall=True),
+            "bw_demand_mean": self.bw_demand_mean,
+            "bw_demand_std": self.bw_demand_std,
+            "deadline_misses": self.deadline_misses,
+            **{f"ttft_{k}": v for k, v in
+               self.percentiles(self.ttft()).items()},
+            **{f"tpot_{k}": v for k, v in
+               self.percentiles(self.tpot()).items()},
+        }

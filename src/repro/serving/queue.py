@@ -1,0 +1,95 @@
+"""Request queue with admission control, deadlines, and FIFO dispatch.
+
+Extracted and hardened from the inline list in the old ``launch/serve.py``:
+requests are first-class records carrying arrival time, a completion
+deadline, and per-token timestamps (TTFT/TPOT are computed by
+``repro.serving.metrics`` from these).  Admission control rejects work the
+system cannot serve — a bounded queue depth plus a deadline-feasibility
+check against a caller-supplied service-time estimate.
+
+Timestamps are *virtual* seconds on the scheduler's clock (derived from the
+analytic phase costs), so queue/deadline behaviour is deterministic and
+hardware-independent in tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (prompt_len,) int32 token ids
+    max_new_tokens: int
+    arrival: float = 0.0            # virtual s
+    deadline: Optional[float] = None  # absolute virtual completion deadline
+    # filled in by the engine:
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+    tokens: List[int] = field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.max_new_tokens
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+
+class RequestQueue:
+    """Bounded FIFO with admission control.
+
+    ``service_estimate(req)`` — optional callable returning the estimated
+    seconds to serve ``req`` end-to-end (queueing excluded); a request whose
+    deadline cannot be met even if started immediately is rejected at
+    submission (cheaper than accepting work that is guaranteed late).
+    """
+
+    def __init__(self, max_depth: Optional[int] = None,
+                 service_estimate: Optional[Callable[[Request], float]] = None):
+        self.max_depth = max_depth
+        self.service_estimate = service_estimate
+        self._fifo: List[Request] = []
+        self._next_rid = 0
+        self.n_submitted = 0
+        self.n_rejected = 0
+        self.completed: List[Request] = []
+
+    def __len__(self) -> int:
+        return len(self._fifo)
+
+    def submit(self, prompt, max_new_tokens: int, *, arrival: float = 0.0,
+               deadline: Optional[float] = None) -> Optional[Request]:
+        """Returns the admitted Request, or None when rejected."""
+        req = Request(rid=self._next_rid, prompt=np.asarray(prompt),
+                      max_new_tokens=int(max_new_tokens), arrival=arrival,
+                      deadline=deadline)
+        if self.max_depth is not None and len(self._fifo) >= self.max_depth:
+            self.n_rejected += 1
+            return None
+        if (deadline is not None and self.service_estimate is not None
+                and arrival + self.service_estimate(req) > deadline):
+            self.n_rejected += 1
+            return None
+        self._next_rid += 1
+        self.n_submitted += 1
+        self._fifo.append(req)
+        return req
+
+    def pop(self, n: int = 1) -> List[Request]:
+        """FIFO-dequeue up to ``n`` requests for slot refill / a prefill
+        wave.  Preserves submission order (the ordering invariant the slot
+        refill tests pin down)."""
+        out, self._fifo = self._fifo[:n], self._fifo[n:]
+        return out
+
+    def mark_done(self, req: Request) -> None:
+        self.completed.append(req)
+
+    @property
+    def drained(self) -> bool:
+        return not self._fifo

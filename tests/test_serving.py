@@ -1,0 +1,161 @@
+"""repro.serving: queue admission, continuous-batching slot refill,
+phase-staggered scheduling, and the serving-trace shaping validation
+(the serving analogue of the paper's Fig. 5 gates)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import hw
+from repro.serving import (PhaseStaggeredScheduler, RequestQueue,
+                           SimulatedEngine, decode_cost, prefill_cost,
+                           serving_trace_report)
+
+
+def _cfg():
+    return get_config("qwen2-7b", smoke=True)
+
+
+def _load(queue, n, prompt_len=8, gen=4, deadline=None):
+    rng = np.random.default_rng(0)
+    return [queue.submit(rng.integers(1, 100, size=(prompt_len,))
+                         .astype(np.int32), gen, deadline=deadline)
+            for _ in range(n)]
+
+
+def _fleet(cfg, partitions, slots=2, max_len=64):
+    return [SimulatedEngine(cfg, slots=slots, max_len=max_len, pid=p,
+                            peak_flops=hw.TPU_PEAK_FLOPS / partitions)
+            for p in range(partitions)]
+
+
+# ---------------------------------------------------------------------------
+# queue: admission control
+# ---------------------------------------------------------------------------
+
+
+def test_queue_depth_admission():
+    q = RequestQueue(max_depth=3)
+    admitted = _load(q, 5)
+    assert [r is not None for r in admitted] == [True] * 3 + [False] * 2
+    assert q.n_rejected == 2 and len(q) == 3
+    # FIFO pop preserves submission order
+    assert [r.rid for r in q.pop(3)] == [0, 1, 2]
+
+
+def test_queue_deadline_admission():
+    # 1s of service per request: a 10s deadline is feasible, 0.1s is not
+    q = RequestQueue(service_estimate=lambda r: 1.0)
+    ok = q.submit(np.zeros(4, np.int32), 4, deadline=10.0)
+    late = q.submit(np.zeros(4, np.int32), 4, deadline=0.1)
+    assert ok is not None and late is None
+    assert q.n_rejected == 1
+
+
+# ---------------------------------------------------------------------------
+# phase-cost premise: prefill compute-bound, decode bandwidth-bound
+# ---------------------------------------------------------------------------
+
+
+def test_decode_demands_more_bandwidth_than_prefill():
+    cfg = _cfg()
+    pre = prefill_cost(cfg, 4, 32)
+    dec = decode_cost(cfg, 4, 40)
+    assert dec.demand > pre.demand  # the attn/BN analogue the paper needs
+    assert pre.duration > dec.duration
+
+
+# ---------------------------------------------------------------------------
+# continuous batching: slot refill ordering + completion
+# ---------------------------------------------------------------------------
+
+
+def test_slot_refill_preserves_order_and_completes_all():
+    cfg = _cfg()
+    q = RequestQueue()
+    _load(q, 7, gen=4)
+    eng = _fleet(cfg, 1, slots=2, max_len=64)[0]
+    m = PhaseStaggeredScheduler([eng], q, policy="none").run(max_ticks=500)
+    done = sorted(q.completed, key=lambda r: r.rid)
+    assert len(done) == 7
+    assert all(len(r.tokens) == r.max_new_tokens for r in done)
+    # service order is FIFO (the refill invariant)
+    assert eng.assign_order == sorted(eng.assign_order)
+    # refill actually happened: more requests served than prefill waves
+    # could seat (2 slots/wave), so some slots were handed on mid-wave
+    assert eng.n_prefills < len(done) / 2 + 1
+    # later submissions never finish before earlier ones start decoding
+    t_done = [r.t_done for r in done]
+    assert all(a <= b + 1e-12 for a, b in zip(t_done, t_done[1:]))
+    assert m.completed_tokens == 7 * 4
+
+
+# ---------------------------------------------------------------------------
+# scheduler phase staggering
+# ---------------------------------------------------------------------------
+
+
+def test_demand_policy_non_overlapping_prefill_phases():
+    cfg = _cfg()
+    q = RequestQueue()
+    _load(q, 32, gen=4)
+    sched = PhaseStaggeredScheduler(_fleet(cfg, 4), q, policy="demand")
+    sched.run(max_ticks=2000)
+    prefills = [rec.phases.count("prefill") for rec in sched.trace]
+    assert max(prefills) == 1  # compute-bound phases never overlap
+    # phases interleave: some ticks mix one prefill with running decodes
+    assert any(rec.phases.count("prefill") == 1
+               and rec.phases.count("decode") >= 1 for rec in sched.trace)
+    assert len(q.completed) == 32
+
+
+def test_none_policy_aligns_phases():
+    cfg = _cfg()
+    q = RequestQueue()
+    _load(q, 32, gen=4)
+    sched = PhaseStaggeredScheduler(_fleet(cfg, 4), q, policy="none")
+    sched.run(max_ticks=2000)
+    assert any(rec.phases.count("prefill") >= 2 for rec in sched.trace)
+    assert len(q.completed) == 32
+
+
+@pytest.mark.parametrize("policy", ["uniform", "demand"])
+def test_staggered_policies_interleave_phases_more(policy):
+    """The scheduler's job is phase mixing: staggered policies spend more
+    ticks with prefill and decode in flight simultaneously than ``none``
+    (whether mixing smooths the *timeline* is the fluid simulation's gate —
+    the lockstep tick clock is too coarse to measure that here)."""
+    cfg = _cfg()
+
+    def mixed_ticks(pol):
+        q = RequestQueue()
+        _load(q, 48, gen=8)
+        sched = PhaseStaggeredScheduler(_fleet(cfg, 4), q, policy=pol)
+        sched.run(max_ticks=4000)
+        assert len(q.completed) == 48
+        return sum(1 for rec in sched.trace
+                   if "prefill" in rec.phases and "decode" in rec.phases)
+
+    assert mixed_ticks(policy) > mixed_ticks("none")
+
+
+# ---------------------------------------------------------------------------
+# serving-trace simulation: the Fig. 5 analogue gate
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["uniform", "demand"])
+def test_serving_sim_std_strictly_lower_p4_vs_p1(policy):
+    rep = serving_trace_report(_cfg(), partitions=4, policy=policy,
+                               total_slots=16, n_requests=64,
+                               prompt_len=32, gen=16)
+    assert rep["bw_std"] < rep["base_bw_std"]   # smoother
+    assert rep["bw_mean"] > rep["base_bw_mean"]  # and better utilized
+
+
+def test_serve_cli_partitioned_end_to_end():
+    from repro.launch.serve import main
+    outs = main(["--arch", "mamba2-130m", "--smoke", "--requests", "6",
+                 "--batch", "2", "--partitions", "2", "--stagger", "demand",
+                 "--prompt-len", "8", "--gen", "4"])
+    assert len(outs) == 4  # 2 partitions x 2 slots
+    assert sum(len(o) for o in outs) == 6 * 4

@@ -31,17 +31,16 @@ def test_dryrun_small_fleet_subprocess():
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax
-        from jax.sharding import AxisType
         from repro.configs import get_config
         from repro.configs.base import ShapeCell
+        from repro.core.roofline import cost_analysis_dict
         from repro.launch import sharding as SH
-        from repro.launch.mesh import batch_axes
+        from repro.launch.mesh import batch_axes, make_host_mesh, mesh_context
         from repro.models import api as mapi, pspec
         from repro.optim.adamw import adamw_init
         from repro.runtime import steps as RS
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = make_host_mesh(2, 4)
         cfg = get_config("qwen2-7b", smoke=True)
         shape = ShapeCell("t", 64, 8, "train")
         api = mapi.build(cfg)
@@ -54,13 +53,13 @@ def test_dryrun_small_fleet_subprocess():
         specs = api.input_specs(shape)
         b_sh = SH.batch_shardings(specs, mesh, shape.global_batch)
         fn = RS.make_train_step(api, accum=2)
-        with jax.set_mesh(mesh), pspec.axes(batch=batch_axes(mesh, 8),
+        with mesh_context(mesh), pspec.axes(batch=batch_axes(mesh, 8),
                                             model_size=4):
             c = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh),
                         donate_argnums=(0, 1)).lower(params, opt, specs).compile()
         ma = c.memory_analysis()
         print("OK", ma.temp_size_in_bytes >= 0,
-              (c.cost_analysis() or {}).get("flops", 0) > 0)
+              cost_analysis_dict(c).get("flops", 0) > 0)
     """)
     assert "OK True True" in r.stdout, r.stdout + r.stderr
 
