@@ -13,22 +13,24 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = []
-    for mod, args in [
-        (fig1_bandwidth_over_time, ()),
-        (fig2_weight_ratio, ()),
-        (table1_resnet_layers, ()),
-        (fig4_std_vs_cores, ()),
-        (fig5_partition_sweep, ("uniform",)),
-        (fig5_partition_sweep, ("optimized",)),
-        (fig6_traffic_trace, ()),
-        (serving_shaping, ()),
-        (roofline_report, ()),
+    for fn, args in [
+        (fig1_bandwidth_over_time.run, ()),
+        (fig2_weight_ratio.run, ()),
+        (table1_resnet_layers.run, ()),
+        (fig4_std_vs_cores.run, ()),
+        (fig5_partition_sweep.run, ("uniform",)),
+        (fig5_partition_sweep.run, ("optimized",)),
+        (fig6_traffic_trace.run, ()),
+        (serving_shaping.run, ()),
+        (serving_shaping.run_ragged, ()),   # paged per-slot batching path
+        (roofline_report.run, ()),
     ]:
+        name = f"{fn.__module__}.{fn.__name__}"
         try:
-            mod.run(*args)
+            fn(*args)
         except Exception as e:  # noqa: BLE001
-            failures.append((mod.__name__, e))
-            print(f"{mod.__name__},0.0,ERROR:{e}")
+            failures.append((name, e))
+            print(f"{name},0.0,ERROR:{e}")
             traceback.print_exc()
     if failures:
         raise SystemExit(f"{len(failures)} benchmark(s) failed: "

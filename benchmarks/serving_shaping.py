@@ -32,11 +32,13 @@ POLICIES = ["none", "uniform", "demand"]
 
 
 def _sched_metrics(cfg, *, partitions, policy, total_slots, n_requests,
-                   prompt_len, gen, bandwidth):
+                   prompt_len, gen, bandwidth, ragged=False):
     rng = np.random.default_rng(0)
     queue = RequestQueue()
-    for _ in range(n_requests):
-        queue.submit(rng.integers(1, cfg.vocab, size=(prompt_len,))
+    lens = _ragged_lens(prompt_len, n_requests) if ragged \
+        else [prompt_len] * n_requests
+    for plen in lens:
+        queue.submit(rng.integers(1, cfg.vocab, size=(plen,))
                      .astype(np.int32), gen)
     slots = max(total_slots // partitions, 1)
     engines = [SimulatedEngine(cfg, slots=slots,
@@ -45,7 +47,16 @@ def _sched_metrics(cfg, *, partitions, policy, total_slots, n_requests,
                for p in range(partitions)]
     sched = PhaseStaggeredScheduler(engines, queue, policy=policy,
                                     bandwidth=bandwidth)
-    return sched.run()
+    m = sched.run()
+    assert len(queue.completed) == n_requests, \
+        f"only {len(queue.completed)}/{n_requests} served"
+    return m
+
+
+def _ragged_lens(prompt_len, n):
+    """Cyclic mixed prompt lengths around ``prompt_len`` (paged-path load)."""
+    base = [max(prompt_len // 2, 4), max(3 * prompt_len // 4, 4), prompt_len]
+    return [base[i % len(base)] for i in range(n)]
 
 
 def run(arch: str = "qwen2-7b", smoke: bool = True, n_requests: int = 64,
@@ -76,6 +87,36 @@ def run(arch: str = "qwen2-7b", smoke: bool = True, n_requests: int = 64,
                 f"sim_perf_rel={rep['perf_rel']:.3f}")
 
 
+def run_ragged(arch: str = "qwen2-7b", smoke: bool = True,
+               n_requests: int = 48, total_slots: int = 16,
+               prompt_len: int = 32, gen: int = 16):
+    """Ragged-prompt scenario: the same partitions x policy sweep over a
+    mixed-length request load — exercises the paged per-slot batching path
+    (the seed's dense engine raised on this load)."""
+    cfg = get_config(arch, smoke=smoke)
+    bw = phase_balanced_bandwidth(cfg, total_slots=total_slots,
+                                  prompt_len=prompt_len, gen=gen)
+    kw = dict(total_slots=total_slots, n_requests=n_requests,
+              prompt_len=prompt_len, gen=gen, ragged=True)
+    t0 = time.perf_counter()
+    base = _sched_metrics(cfg, partitions=1, policy="none", bandwidth=bw,
+                          **kw)
+    base_us = (time.perf_counter() - t0) * 1e6
+    cells = [(1, "none", base, base_us)]
+    for policy in POLICIES:
+        t0 = time.perf_counter()
+        m = _sched_metrics(cfg, partitions=4, policy=policy, bandwidth=bw,
+                           **kw)
+        cells.append((4, policy, m, (time.perf_counter() - t0) * 1e6))
+    for P, policy, m, us in cells:
+        record(
+            f"serving_shaping_ragged.{cfg.name}.P{P}.{policy}", us,
+            f"tok_s_rel={m.throughput() / base.throughput():.3f};"
+            f"demand_std_rel="
+            f"{m.bw_demand_std / max(base.bw_demand_std, 1e-15):.3f};"
+            f"ttft_p95={m.percentiles(m.ttft())['p95']:.3e}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-7b")
@@ -85,11 +126,17 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--uniform-only", action="store_true",
+                    help="skip the ragged-prompt (paged-path) scenario")
     args = ap.parse_args(argv)
     n_req = args.requests or (48 if args.smoke else 256)
     print("name,us_per_call,derived")
     run(args.arch, smoke=args.smoke, n_requests=n_req,
         total_slots=args.slots, prompt_len=args.prompt_len, gen=args.gen)
+    if not args.uniform_only:
+        run_ragged(args.arch, smoke=args.smoke, n_requests=n_req,
+                   total_slots=args.slots, prompt_len=args.prompt_len,
+                   gen=args.gen)
 
 
 if __name__ == "__main__":

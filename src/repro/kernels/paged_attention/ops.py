@@ -1,0 +1,20 @@
+"""Jit'd public wrapper for the paged decode-attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .paged_attention import paged_decode_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode(q, k_pages, v_pages, tables, cur_pos, *, window: int = 0,
+                 interpret: bool | None = None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return paged_decode_pallas(q, k_pages, v_pages, tables, cur_pos,
+                               window=window, interpret=interp)

@@ -1,0 +1,107 @@
+"""Paged decode-attention Pallas TPU kernel: block-table KV pages.
+
+Same online-softmax streaming structure as ``repro.kernels.flash_decode``,
+but K/V live in a shared pool of fixed-size blocks ``(N, bs, Hkv, D)`` and
+each slot reads its own chain of blocks through a block table.  The table
+(and the per-slot context lengths) ride in as *scalar-prefetch* operands —
+``PrefetchScalarGridSpec`` makes them available to the BlockSpec index maps,
+so grid step ``(b, h, t)`` DMAs physical block ``tables[b, t]`` straight
+from HBM without ever materializing the dense gather.
+
+Grid: ``(B, Hkv, T)`` with the block axis sequential per (slot, kv-head);
+q rows pack the GQA group so one MXU dot serves every query head of the kv
+head.  Positions past a slot's ``cur_pos`` (including whole null-padded
+blocks of short slots) are masked by absolute logical position, so ragged
+contexts stream the same way as full ones.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _pa_kernel(tables_ref, cur_ref, q_ref, k_ref, v_ref, o_ref,
+               m_ref, l_ref, acc_ref, *, n_t: int, bs: int, window: int):
+    b = pl.program_id(0)
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cur = cur_ref[b]
+    q = q_ref[0, 0]          # (G, D)
+    k = k_ref[0, :, 0]       # (bs, D)
+    v = v_ref[0, :, 0]       # (bs, D)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (G, bs)
+    k_pos = t * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+    ok = k_pos <= cur
+    if window > 0:
+        ok &= k_pos > (cur - window)
+    s = jnp.where(ok[None, :], s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(t == n_t - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_pallas(q, k_pages, v_pages, tables, cur_pos, *,
+                        window: int = 0, interpret: bool = False):
+    """q: (B, Hq, D); pages: (N, bs, Hkv, D); tables: (B, T) int32;
+    cur_pos: (B,) int32.  Returns (B, Hq, D); 1/sqrt(D) folded into q."""
+    B, Hq, D = q.shape
+    _, bs, Hkv, _ = k_pages.shape
+    T = tables.shape[1]
+    assert Hq % Hkv == 0
+    G = Hq // Hkv
+
+    qg = (q.reshape(B, Hkv, G, D) / math.sqrt(D)).astype(q.dtype)
+    tables = jnp.asarray(tables, jnp.int32)
+    cur = jnp.asarray(cur_pos, jnp.int32).reshape(B)
+
+    kernel = functools.partial(_pa_kernel, n_t=T, bs=bs, window=window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, T),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, t, tbl, cur: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, t, tbl, cur: (tbl[b, t], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, t, tbl, cur: (tbl[b, t], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, t, tbl, cur: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(tables, cur, qg, k_pages, v_pages)
+    return out.reshape(B, Hq, D)

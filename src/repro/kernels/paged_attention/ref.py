@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for paged decode attention: one query token per slot
+against block-table-indexed KV pages with per-slot context lengths."""
+import math
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def paged_decode_attention(q, k_pages, v_pages, tables, cur_pos, *,
+                           window: int = 0):
+    """q: (B, Hq, D); pages: (N, bs, Hkv, D); tables: (B, T) int32 block ids
+    into the pool; cur_pos: (B,) int32 — logical positions [0, cur_pos[b]]
+    of slot b are valid (block t of slot b covers positions
+    [t*bs, (t+1)*bs)).  Returns (B, Hq, D)."""
+    B, Hq, D = q.shape
+    _, bs, Hkv, _ = k_pages.shape
+    T = tables.shape[1]
+    S = T * bs
+    G = Hq // Hkv
+    # dense per-slot view via the block table (the gather the kernel avoids)
+    kd = k_pages[tables].reshape(B, S, Hkv, D)
+    vd = v_pages[tables].reshape(B, S, Hkv, D)
+    qr = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qr, kd,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    ok = pos[None, :] <= cur_pos[:, None]          # (B, S)
+    if window:
+        ok &= pos[None, :] > (cur_pos[:, None] - window)
+    s = jnp.where(ok[:, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(vd.dtype), vd,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Hq, D).astype(q.dtype)

@@ -38,6 +38,11 @@ def main(argv=None):
     ap.add_argument("--partitions", type=int, default=1)
     ap.add_argument("--stagger", default="uniform",
                     choices=["none", "uniform", "demand"])
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged KV pool block size (tokens)")
+    ap.add_argument("--dense", action="store_true",
+                    help="use the dense per-wave KV layout instead of the "
+                         "paged pool (the equivalence oracle)")
     ap.add_argument("--max-queue", type=int, default=None,
                     help="admission control: max queued requests")
     ap.add_argument("--deadline", type=float, default=None,
@@ -73,12 +78,27 @@ def main(argv=None):
     # deployments replicate per partition (core.partitioning prices that) ---
     api = mapi.build(cfg)
     params = api.init(jax.random.PRNGKey(0))
-    decode_fn = jax.jit(api.decode, donate_argnums=(2,))
-    prefill_fn = jax.jit(lambda p, b: api.prefill(p, b, max_len=max_len))
+    paged = (cfg.family != "encdec") and not args.dense
+    # one shared jitted fn per phase: same shapes across engines -> one
+    # compiled executable for the whole fleet
+    if paged:
+        decode_fn = jax.jit(api.decode_paged, donate_argnums=(2,))
+    else:
+        decode_fn = jax.jit(api.decode, donate_argnums=(2,))
+    if cfg.family == "encdec":
+        prefill_fn = jax.jit(lambda p, b: api.prefill(p, b, max_len=max_len))
+    else:
+        prefill_fn = jax.jit(
+            lambda p, b, lens: api.prefill(p, b, max_len=max_len, lens=lens))
+    prefill_uniform_fn = jax.jit(
+        lambda p, b, ml: api.prefill(p, b, max_len=ml),
+        static_argnames=("ml",))
     engines = [PartitionEngine(cfg, api, params, slots=slots,
                                max_len=max_len, pid=p,
-                               peak_flops=peak_per_part,
-                               decode_fn=decode_fn, prefill_fn=prefill_fn)
+                               peak_flops=peak_per_part, paged=paged,
+                               block_size=args.block_size,
+                               decode_fn=decode_fn, prefill_fn=prefill_fn,
+                               prefill_uniform_fn=prefill_uniform_fn)
                for p in range(P)]
 
     # pipe sized inside the load's phase dynamic range (see trace_sim);

@@ -38,6 +38,8 @@ class ModelAPI:
     init_cache: Callable
     input_specs: Callable
     cache_specs: Callable
+    # paged decode path (block-table KV pool); None for families without it
+    decode_paged: Any = None
 
 
 def _text_len(cfg: ModelConfig, seq_len: int) -> int:
@@ -72,11 +74,14 @@ def _build_lm(cfg: ModelConfig) -> ModelAPI:
     def forward(params, batch):
         return TF.forward_lm(params, cfg, batch)
 
-    def prefill(params, batch, max_len=None):
-        return TF.prefill(params, cfg, batch, max_len)
+    def prefill(params, batch, max_len=None, lens=None):
+        return TF.prefill(params, cfg, batch, max_len, lens=lens)
 
     def decode(params, token, cache):
         return TF.decode_step(params, cfg, token, cache)
+
+    def decode_paged(params, token, pcache):
+        return TF.decode_step_paged(params, cfg, token, pcache)
 
     def init_cache(batch, max_len):
         return TF.init_cache(cfg, batch, max_len)
@@ -103,7 +108,7 @@ def _build_lm(cfg: ModelConfig) -> ModelAPI:
         return cache
 
     return ModelAPI(cfg, init, loss, forward, prefill, decode, init_cache,
-                    input_specs, cache_specs)
+                    input_specs, cache_specs, decode_paged=decode_paged)
 
 
 # ---------------------------------------------------------------------------

@@ -220,8 +220,10 @@ def naive_attention(q, k, v, *, causal=True, window=None, q_offset=0):
 def decode_attention(q, k_cache, v_cache, cur_pos, *, window=None):
     """Single-token attention against a (possibly longer) cache.
 
-    q: (B, 1, Hq, D); caches: (B, S, Hkv, D); cur_pos: () int32 — 0-indexed
-    position of the current token (cache entries [0, cur_pos] are valid).
+    q: (B, 1, Hq, D); caches: (B, S, Hkv, D); cur_pos: () or (B,) int32 —
+    0-indexed position of each slot's current token (cache entries
+    [0, cur_pos[b]] are valid; a vector gives every slot its own context
+    length, the masked-attention half of per-slot continuous batching).
     """
     B, _, Hq, D = q.shape
     _, S, Hkv, _ = k_cache.shape
@@ -230,10 +232,11 @@ def decode_attention(q, k_cache, v_cache, cur_pos, *, window=None):
     s = jnp.einsum("bhgd,bkhd->bhgk", qr, k_cache,
                    preferred_element_type=jnp.float32) / math.sqrt(D)
     pos = jnp.arange(S, dtype=jnp.int32)
-    ok = pos[None, :] <= cur_pos
+    cur = jnp.asarray(cur_pos, jnp.int32).reshape(-1, 1)  # (1,1) or (B,1)
+    ok = pos[None, :] <= cur
     weff = _window_len(window)
     if weff is not None:
-        ok &= pos[None, :] > (cur_pos - weff)
+        ok &= pos[None, :] > (cur - weff)
     s = jnp.where(ok[:, None, None, :], s, _NEG)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
@@ -292,14 +295,37 @@ def attention_block(p, cfg, x, *, window=None, positions=None):
     return o.reshape(B, S, -1) @ p["wo"], (k, v)
 
 
+def _slot_positions(cur_pos, B):
+    """Normalize a scalar-or-(B,) write position to per-slot (B, 1)."""
+    cur = jnp.asarray(cur_pos, jnp.int32)
+    if cur.ndim == 0:
+        return cur * jnp.ones((B, 1), jnp.int32)
+    return cur[:, None]
+
+
+def _cache_write(cache_kv, new_kv, cur_pos):
+    """Write each slot's (1, Hkv, D) row at its own position.
+
+    cache_kv: (B, S, Hkv, D); new_kv: (B, 1, Hkv, D); cur_pos () or (B,).
+    Scalar positions keep the single contiguous DUS; per-slot positions
+    vmap the DUS over the batch (lowered as a scatter)."""
+    cur = jnp.asarray(cur_pos, jnp.int32)
+    if cur.ndim == 0:
+        return lax.dynamic_update_slice_in_dim(cache_kv, new_kv, cur, axis=1)
+    return jax.vmap(
+        lambda c, u, s: lax.dynamic_update_slice_in_dim(c, u, s, axis=0)
+    )(cache_kv, new_kv, cur)
+
+
 def attention_decode(p, cfg, x, cache, cur_pos, *, window=None):
-    """x: (B, 1, d); cache: dict(k=(B,S,Hkv,D), v=...); cur_pos: () int32
-    0-indexed position to write/attend. Returns out, new cache."""
+    """x: (B, 1, d); cache: dict(k=(B,S,Hkv,D), v=...); cur_pos: () or (B,)
+    int32 0-indexed position to write/attend per slot. Returns out, new
+    cache."""
     B = x.shape[0]
-    positions = cur_pos * jnp.ones((B, 1), jnp.int32)
+    positions = _slot_positions(cur_pos, B)
     q, k, v = attention_qkv(p, cfg, x, positions)
-    kc = lax.dynamic_update_slice_in_dim(cache["k"], k, cur_pos, axis=1)
-    vc = lax.dynamic_update_slice_in_dim(cache["v"], v, cur_pos, axis=1)
+    kc = _cache_write(cache["k"], k, cur_pos)
+    vc = _cache_write(cache["v"], v, cur_pos)
     o = decode_attention(q, kc, vc, cur_pos, window=window)
     return o.reshape(B, 1, -1) @ p["wo"], {"k": kc, "v": vc}
 
@@ -313,11 +339,37 @@ def attention_decode_slice(p, cfg, x, cache, cur_pos, *, window=None):
     model-axis layout PartitionSpec cannot express; pinning D 16-ways
     forced a full cache rematerialization per layer (~15 GiB/step)."""
     B = x.shape[0]
-    positions = cur_pos * jnp.ones((B, 1), jnp.int32)
+    positions = _slot_positions(cur_pos, B)
     q, k, v = attention_qkv(p, cfg, x, positions)
-    kc = lax.dynamic_update_slice_in_dim(cache["k"], k, cur_pos, axis=1)
-    vc = lax.dynamic_update_slice_in_dim(cache["v"], v, cur_pos, axis=1)
+    kc = _cache_write(cache["k"], k, cur_pos)
+    vc = _cache_write(cache["v"], v, cur_pos)
     o = decode_attention(q, kc, vc, cur_pos, window=window)
+    return o.reshape(B, 1, -1) @ p["wo"], (k, v)
+
+
+def attention_decode_paged(p, cfg, x, k_pages, v_pages, tables, cur_pos, *,
+                           window=None):
+    """Decode attention against one layer's paged KV pool.
+
+    x: (B, 1, d); pages: (N, bs, Hkv, D); tables: (B, T) int32 block ids
+    (null-padded); cur_pos: (B,) int32 per-slot write position.  Each
+    slot's block chain is gathered to a dense (B, T*bs, ...) view, the new
+    token's K/V row is placed at its logical position in that view, and
+    the same masked attention as the dense path runs over it (the Pallas
+    kernel in ``repro.kernels.paged_attention`` streams blocks instead of
+    gathering).  Returns (out, (k_new, v_new)): the CALLER persists the new
+    row into the pool — block ``tables[b, cur//bs]``, offset ``cur % bs`` —
+    so the layer-stacked pool slab never round-trips through this function
+    (the paged analogue of ``attention_decode_slice``).
+    """
+    B = x.shape[0]
+    _, bs, Hkv, D = k_pages.shape
+    T = tables.shape[1]
+    cur = jnp.asarray(cur_pos, jnp.int32)
+    q, k, v = attention_qkv(p, cfg, x, cur[:, None])
+    kd = _cache_write(k_pages[tables].reshape(B, T * bs, Hkv, D), k, cur)
+    vd = _cache_write(v_pages[tables].reshape(B, T * bs, Hkv, D), v, cur)
+    o = decode_attention(q, kd, vd, cur, window=window)
     return o.reshape(B, 1, -1) @ p["wo"], (k, v)
 
 

@@ -241,10 +241,14 @@ def loss_fn(params, cfg, batch, *, loss_chunk: int = 256):
 
 
 def init_cache(cfg, batch, max_len, dtype=None):
-    """Cache pytree stacked over layers; max_len includes any prefix tokens."""
+    """Cache pytree stacked over layers; max_len includes any prefix tokens.
+
+    ``len`` is a per-slot (B,) vector: every sequence in the batch carries
+    its own context length, so ragged prompts and per-slot refill share one
+    cache (a scalar is still accepted by ``decode_step`` for compat)."""
     dt = dtype or _dtype(cfg)
     Lc = cfg.n_layers
-    c = {"len": jnp.zeros((), jnp.int32)}
+    c = {"len": jnp.zeros((batch,), jnp.int32)}
     if has_attn(cfg):
         hd = cfg.head_dim
         c["k"] = jnp.zeros((Lc, batch, max_len, cfg.n_kv_heads, hd), dt)
@@ -258,9 +262,15 @@ def init_cache(cfg, batch, max_len, dtype=None):
 
 
 def decode_step(params, cfg, token, cache):
-    """token: (B, 1) int32. Returns (logits (B, 1, V) f32, new cache)."""
+    """token: (B, 1) int32. Returns (logits (B, 1, V) f32, new cache).
+
+    ``cache["len"]`` may be a scalar (legacy shared position) or a (B,)
+    vector of per-slot write positions — the vector form is what lets one
+    decode batch mix sequences of different context lengths (ragged
+    prompts, per-slot continuous-batching refill)."""
     x = pbatch(params["embed"][token])  # (B,1,d)
-    pos = cache["len"]  # position to write
+    B = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(cache["len"], jnp.int32), (B,))
     windows = jnp.asarray(layer_windows(cfg))
 
     def body(carry, xs):
@@ -278,10 +288,12 @@ def decode_step(params, cfg, token, cache):
             a_out, kv = L.attention_decode_slice(
                 bp["attn"], cfg, h, {"k": kc, "v": vc}, pos, window=win)
             k_new, v_new = kv  # (B, 1, Hkv, D)
-            kc_all = lax.dynamic_update_slice(
-                kc_all, k_new[None], (li, 0, pos, 0, 0))
-            vc_all = lax.dynamic_update_slice(
-                vc_all, v_new[None], (li, 0, pos, 0, 0))
+            # write only each slot's new row into the carry (a per-slot
+            # scatter, not a full-slab copy — the slab rematerialization
+            # attention_decode_slice exists to avoid)
+            b_idx = jnp.arange(k_new.shape[0])
+            kc_all = kc_all.at[li, b_idx, pos].set(k_new[:, 0])
+            vc_all = vc_all.at[li, b_idx, pos].set(v_new[:, 0])
             delta = delta + a_out
         if has_ssm(cfg):
             s_out, sc = SSM.ssm_decode(bp["ssm"], cfg, h,
@@ -326,8 +338,97 @@ def decode_step(params, cfg, token, cache):
     return logits, new_cache
 
 
-def prefill(params, cfg, batch, max_len=None):
+def decode_step_paged(params, cfg, token, pcache):
+    """One decode step against a paged (block-table) KV pool.
+
+    token: (B, 1) int32.  pcache:
+      k_pages/v_pages : (L, N, bs, Hkv, D) shared block pool
+      tables          : (B, T) int32 per-slot block chains (null-padded)
+      lens            : (B,) int32 per-slot write positions
+      ssm_state/ssm_conv (families with SSM): per-slot as in the dense cache
+    Same math as ``decode_step`` on the dense gather of each slot's chain —
+    the equivalence the engine test suite pins down.  Returns
+    (logits (B, 1, V) f32, new pcache) with every ``lens`` advanced by one
+    (the engine overrides lengths for inactive slots from host bookkeeping).
+    """
+    x = pbatch(params["embed"][token])  # (B,1,d)
+    B = x.shape[0]
+    pos = jnp.asarray(pcache["lens"], jnp.int32)
+    tables = jnp.asarray(pcache["tables"], jnp.int32)
+    windows = jnp.asarray(layer_windows(cfg))
+
+    def body(carry, xs):
+        x, kp_all, vp_all = carry
+        bp, win, li, st, cv = xs
+        h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+        delta = 0.0
+        new_st, new_cv = st, cv
+        if has_attn(cfg):
+            kp = lax.dynamic_index_in_dim(kp_all, li, 0, keepdims=False)
+            vp = lax.dynamic_index_in_dim(vp_all, li, 0, keepdims=False)
+            a_out, (k_new, v_new) = L.attention_decode_paged(
+                bp["attn"], cfg, h, kp, vp, tables, pos, window=win)
+            # persist only each slot's new row into its current block (a
+            # per-slot scatter; the pool slab never round-trips per layer)
+            bs = kp_all.shape[2]
+            blk = jnp.take_along_axis(
+                tables, jnp.clip(pos // bs, 0, tables.shape[1] - 1)[:, None],
+                axis=1)[:, 0]
+            kp_all = kp_all.at[li, blk, pos % bs].set(k_new[:, 0])
+            vp_all = vp_all.at[li, blk, pos % bs].set(v_new[:, 0])
+            delta = delta + a_out
+        if has_ssm(cfg):
+            s_out, sc = SSM.ssm_decode(bp["ssm"], cfg, h,
+                                       {"state": st, "conv": cv})
+            new_st, new_cv = sc["state"], sc["conv"]
+            if has_attn(cfg):
+                delta = (delta + s_out) * 0.5
+            else:
+                delta = delta + s_out
+        x = x + delta
+        if "moe" in bp:
+            h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+            m_out, _ = MOE.moe_block(bp["moe"], cfg, h)
+            x = x + m_out
+        elif "mlp" in bp:
+            h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+            x = x + L.mlp_block(bp["mlp"], h, cfg.act)
+        return (x, kp_all, vp_all), (new_st, new_cv)
+
+    Lc = cfg.n_layers
+    dummy = jnp.zeros((Lc, 0), _dtype(cfg))
+    dummy2 = jnp.zeros((0,), _dtype(cfg))
+    kp = pcache.get("k_pages", dummy2)
+    vp = pcache.get("v_pages", dummy2)
+    st = pcache.get("ssm_state", dummy)
+    cv = pcache.get("ssm_conv", dummy)
+    lidx = jnp.arange(Lc, dtype=jnp.int32)
+
+    (x, nkp, nvp), (nst, ncv) = lax.scan(
+        body, (x, kp, vp), (params["blocks"], windows, lidx, st, cv))
+
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head).astype(jnp.float32)
+
+    new_pcache = dict(pcache)
+    if has_attn(cfg):
+        new_pcache["k_pages"], new_pcache["v_pages"] = nkp, nvp
+    if has_ssm(cfg):
+        new_pcache["ssm_state"], new_pcache["ssm_conv"] = nst, ncv
+    new_pcache["lens"] = pos + 1
+    return logits, new_pcache
+
+
+def prefill(params, cfg, batch, max_len=None, lens=None):
     """Run the prompt through the model, building a decode cache.
+
+    ``lens`` (optional, (B,) int32): per-slot valid text-token counts for a
+    ragged wave — prompts shorter than the padded batch width take their
+    "last-position" logits at their own final token (causal masking makes
+    the pad tokens after a slot's length invisible to it), and the cache
+    ``len`` vector records each slot's true context.  Without ``lens`` every
+    slot uses the full width.
 
     Returns (last-position logits (B, V) f32, cache).
     """
@@ -376,11 +477,19 @@ def prefill(params, cfg, batch, max_len=None):
     x, caches = lax.scan(body, x, (params["blocks"], windows))
     x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    logits = (x[:, -1] @ head).astype(jnp.float32)
+    if lens is None:
+        logits = (x[:, -1] @ head).astype(jnp.float32)
+        len_vec = jnp.full((B,), S, jnp.int32)
+    else:
+        lens = jnp.asarray(lens, jnp.int32)
+        idx = jnp.clip(n_prefix + lens - 1, 0, S - 1)       # (B,)
+        last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+        logits = (last @ head).astype(jnp.float32)
+        len_vec = n_prefix + lens
 
     cache = init_cache(cfg, B, max_len)
     for key in ("k", "v", "ssm_state", "ssm_conv"):
         if key in caches:
             cache[key] = caches[key].astype(cache[key].dtype)
-    cache["len"] = jnp.asarray(S, jnp.int32)
+    cache["len"] = len_vec
     return logits, cache

@@ -4,12 +4,15 @@ The paper's traffic-shaping idea applied to LM serving: P partition engines
 (``engine.PartitionEngine``) run phase-staggered continuous batching under
 ``scheduler.PhaseStaggeredScheduler`` so compute-bound prefill and
 bandwidth-bound decode interleave across partitions instead of aligning.
-``queue`` handles admission/deadlines, ``metrics`` the observables, and
-``trace_sim`` validates the std-reduction claim with the Fig. 5 fluid
-simulation.
+``queue`` handles admission/deadlines, ``kv_pool`` owns the paged KV-cache
+block pool behind per-slot continuous batching, ``metrics`` the
+observables, and ``trace_sim`` validates the std-reduction claim with the
+Fig. 5 fluid simulation.
 """
 from repro.serving.engine import (EngineBase, PartitionEngine, PhaseCost,
-                                  SimulatedEngine, decode_cost, prefill_cost)
+                                  SimulatedEngine, decode_cost, prefill_cost,
+                                  prefill_cost_ragged)
+from repro.serving.kv_pool import BlockPool, PoolExhausted
 from repro.serving.metrics import ServingMetrics
 from repro.serving.queue import Request, RequestQueue
 from repro.serving.scheduler import (POLICIES, PhaseStaggeredScheduler,
@@ -18,7 +21,8 @@ from repro.serving.trace_sim import serving_tasklists, serving_trace_report
 
 __all__ = [
     "EngineBase", "PartitionEngine", "PhaseCost", "SimulatedEngine",
-    "decode_cost", "prefill_cost", "ServingMetrics", "Request",
-    "RequestQueue", "POLICIES", "PhaseStaggeredScheduler", "TickRecord",
-    "serving_tasklists", "serving_trace_report",
+    "decode_cost", "prefill_cost", "prefill_cost_ragged", "BlockPool",
+    "PoolExhausted", "ServingMetrics", "Request", "RequestQueue", "POLICIES",
+    "PhaseStaggeredScheduler", "TickRecord", "serving_tasklists",
+    "serving_trace_report",
 ]

@@ -1,32 +1,43 @@
-"""Per-partition inference engine: params, KV-cache slots, prefill/decode.
+"""Per-partition inference engine: params, paged KV pool, prefill/decode.
 
 An engine is one traffic-shaping partition of the serving fleet.  It owns
-``slots`` concurrent sequences sharing a batched KV cache built through
-``repro.models.api``, and exposes exactly two steppable phases to the
-scheduler:
+``slots`` concurrent sequences backed by a paged KV-cache pool
+(``repro.serving.kv_pool``), and exposes exactly two steppable phases to
+the scheduler:
 
-  * ``prefill_wave()`` — compute-bound: run the prompt batch through the
-    model, building a fresh cache and emitting each request's first token;
+  * ``prefill_wave()`` — compute-bound: run the (possibly ragged) prompt
+    batch through the model, writing each slot's prefix into its own
+    freshly allocated blocks and emitting each request's first token;
   * ``decode_step()``  — bandwidth-bound: one token for every active slot
-    (the whole KV cache streams from HBM per step).
+    (each slot's block chain streams from HBM per step).
 
-Continuous batching: when a slot's request completes mid-wave, the next
-backlog request takes the slot immediately at the shared-prefix boundary
-(the seed driver's refill rule; true per-slot cache rewind is roadmap work),
-provided the remaining cache budget fits its token budget.  Refill is FIFO,
-so request ordering is preserved.
+Continuous batching is *per-slot*: every slot carries its own context
+length and block table, so a prefill wave may mix prompt lengths freely,
+and when a slot's request completes mid-wave its blocks return to the pool
+and the next backlog request prefills its OWN prompt into fresh blocks —
+no shared-prefix boundary, no wave-chain cap.  The refill prefill is priced
+and billed into the tick that triggered it, so a refilled request's TTFT
+reflects its own slot prefill rather than the wave boundary.  Refill is
+FIFO and gated only by pool capacity (``PoolExhausted`` is a hard report,
+never a silent truncation).  The dense per-wave layout survives behind
+``paged=False`` — per-slot cache lengths with masked attention give it the
+same ragged/refill semantics inside one ``(L, slots, max_len)`` slab — and
+is the oracle the paged engine is equivalence-tested against.
 
 Phase costs (FLOPs / bytes / duration / bandwidth demand) come from the
 analytic LM traces in ``repro.core.traffic`` — the same per-layer
-(FLOPs, bytes) decomposition the paper's simulator consumes — so the
-scheduler's ``demand`` policy and the serving-trace validation in
-``core.shaping_sim.simulate_tasks`` price phases identically.
+(FLOPs, bytes) decomposition the paper's simulator consumes.  Decode
+pricing sums each active slot's own context (``decode_cost`` takes a
+per-slot ctx vector), so the scheduler's ``demand`` policy sees the true
+ragged KV read, consistent with ``core.traffic``.
 """
 from __future__ import annotations
 
+import math
+from collections import Counter
 from dataclasses import dataclass
 from functools import lru_cache
-from typing import List, Optional
+from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -34,6 +45,7 @@ from repro.configs.base import ModelConfig
 from repro.core import hw
 from repro.core.shaping_sim import KIND_EFF
 from repro.core.traffic import decode_kv_bytes, lm_layer_traces
+from repro.serving.kv_pool import BlockPool, PoolExhausted
 from repro.serving.queue import Request
 
 
@@ -52,6 +64,13 @@ class PhaseCost:
     def demand(self) -> float:
         """Bytes/s wanted while the phase runs (unconstrained)."""
         return self.byts / max(self.duration, 1e-15)
+
+    def merge(self, other: Optional["PhaseCost"]) -> "PhaseCost":
+        """Sequential composition (a refill prefill billed into a tick)."""
+        if other is None:
+            return self
+        return PhaseCost(self.flops + other.flops, self.byts + other.byts,
+                         self.duration + other.duration)
 
 
 @lru_cache(maxsize=None)
@@ -76,28 +95,58 @@ def _cost_from_traces(traces, batch: int, peak_flops: float,
 def prefill_cost(cfg: ModelConfig, batch: int, prompt_len: int,
                  peak_flops: float = hw.TPU_PEAK_FLOPS,
                  dtype_bytes: int = 2) -> PhaseCost:
-    """One prefill wave of ``batch`` prompts (compute-bound phase)."""
+    """One prefill wave of ``batch`` equal-length prompts (compute-bound)."""
     return _cost_from_traces(_traces(cfg, prompt_len, dtype_bytes),
                              batch, peak_flops)
 
 
-def decode_cost(cfg: ModelConfig, batch: int, ctx: int,
+def prefill_cost_ragged(cfg: ModelConfig, lens: Sequence[int],
+                        peak_flops: float = hw.TPU_PEAK_FLOPS,
+                        dtype_bytes: int = 2) -> PhaseCost:
+    """One fused prefill wave over ragged prompt lengths.
+
+    FLOPs and activation traffic accumulate per prompt at its own length;
+    the weight stream is shared by the fused wave and counted once —
+    reduces exactly to ``prefill_cost`` when all lengths are equal."""
+    counts = Counter(int(l) for l in lens)
+    longest = max(counts)
+    w_by = sum(tr.weight_bytes for tr in _traces(cfg, longest, dtype_bytes))
+    fl = by = dur = 0.0
+    for plen, n in counts.items():
+        for tr in _traces(cfg, plen, dtype_bytes):
+            eff = KIND_EFF.get(tr.kind, 0.4)
+            f = tr.flops_per_img * n
+            fl += f
+            by += tr.act_bytes_per_img * n
+            dur += f / (peak_flops * eff)
+    return PhaseCost(fl, by + w_by, max(dur, 1e-15))
+
+
+def decode_cost(cfg: ModelConfig, batch: int,
+                ctx: Union[int, Sequence[int]],
                 peak_flops: float = hw.TPU_PEAK_FLOPS,
                 dtype_bytes: int = 2) -> PhaseCost:
-    """One decode step over ``batch`` slots at context ``ctx`` — the
-    KV-cache read makes this the bandwidth-bound phase."""
-    kv = decode_kv_bytes(cfg, ctx, dtype_bytes) * batch
+    """One decode step over ``batch`` slots — the KV-cache read makes this
+    the bandwidth-bound phase.  ``ctx`` is either one shared context length
+    or a per-slot vector; ragged batches price the KV read as the SUM of
+    per-slot contexts (a shared scalar over- or under-priced them)."""
+    if np.ndim(ctx) == 0:
+        kv = decode_kv_bytes(cfg, int(ctx), dtype_bytes) * batch
+    else:
+        assert len(ctx) == batch, (len(ctx), batch)
+        kv = sum(decode_kv_bytes(cfg, int(c), dtype_bytes) for c in ctx)
     return _cost_from_traces(_traces(cfg, 1, dtype_bytes),
                              batch, peak_flops, extra_bytes=kv)
 
 
 # ---------------------------------------------------------------------------
-# engine base: slot/backlog state machine (model-execution agnostic)
+# engine base: slot/backlog/pool state machine (model-execution agnostic)
 # ---------------------------------------------------------------------------
 
 
 class EngineBase:
-    """Slot bookkeeping shared by the real and the simulated engine.
+    """Slot, backlog, and block-pool bookkeeping shared by the real and the
+    simulated engine.
 
     Scheduler-facing surface:
       assign(requests)   — extend this partition's FIFO backlog
@@ -105,23 +154,39 @@ class EngineBase:
       busy               — at least one active slot
       prefill_wave(now)  -> PhaseCost   (only when wants_prefill)
       decode_step(now)   -> PhaseCost   (only when busy)
+
+    Per-slot state: ``slot_lens[i]`` is slot i's context length (cache
+    write position, prefix tokens included) and ``slot_tables[i]`` its
+    block chain.  Both are host-side source of truth; the device arrays the
+    real engine feeds the model are rebuilt from them every step.
     """
 
     def __init__(self, cfg: ModelConfig, *, slots: int, max_len: int,
-                 pid: int = 0, peak_flops: float = hw.TPU_PEAK_FLOPS):
+                 pid: int = 0, peak_flops: float = hw.TPU_PEAK_FLOPS,
+                 block_size: int = 16, pool_blocks: Optional[int] = None):
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
         self.pid = pid
         self.peak_flops = peak_flops
+        self.block_size = block_size
+        # default pool: every slot can hold a full max_len chain (+ null)
+        n_blocks = pool_blocks or \
+            1 + slots * int(math.ceil(max_len / block_size))
+        self.pool = BlockPool(n_blocks, block_size)
+        self.table_width = self.pool.blocks_for(max_len)
         self.backlog: List[Request] = []
         self.active: List[Optional[Request]] = [None] * slots
-        self.pos = 0                      # shared cache write position
+        self.slot_lens: List[int] = [0] * slots
+        self.slot_tables: List[List[int]] = [[] for _ in range(slots)]
         self.assign_order: List[int] = []  # rids in service order (tests)
         self.slot_tokens: List[List[int]] = [[] for _ in range(slots)]
         self.n_prefills = 0
+        self.n_refills = 0
         self.n_decode_steps = 0
         self.completed: List[Request] = []
+        self._prefix = (getattr(cfg, "n_meta_tokens", 0) or 0) + \
+                       (getattr(cfg, "n_img_tokens", 0) or 0)
 
     # -- scheduler predicates ------------------------------------------------
     @property
@@ -139,6 +204,10 @@ class EngineBase:
     def assign(self, requests: List[Request]) -> None:
         self.backlog.extend(requests)
 
+    def _ctx_budget(self, req: Request) -> int:
+        """Cache positions this request needs end-to-end."""
+        return self._prefix + req.prompt_len + req.max_new_tokens
+
     # -- cost estimates (used by the demand policy) --------------------------
     def prefill_cost_est(self) -> PhaseCost:
         n = min(self.slots, max(len(self.backlog), 1))
@@ -146,28 +215,44 @@ class EngineBase:
         return prefill_cost(self.cfg, n, plen, self.peak_flops)
 
     def decode_cost_est(self) -> PhaseCost:
-        n = sum(r is not None for r in self.active) or self.slots
-        ctx = max(self.pos, 1)
-        return decode_cost(self.cfg, n, ctx, self.peak_flops)
+        ctxs = [max(l, 1) for r, l in zip(self.active, self.slot_lens)
+                if r is not None]
+        if not ctxs:
+            plen = (self.backlog[0].prompt_len if self.backlog
+                    else self.max_len // 2)
+            ctxs = [max(self._prefix + plen, 1)] * self.slots
+        return decode_cost(self.cfg, len(ctxs), ctxs, self.peak_flops)
 
     # -- phase execution -----------------------------------------------------
     def prefill_wave(self, now: float) -> PhaseCost:
         assert self.wants_prefill, "prefill_wave() on a busy/idle engine"
-        wave = self.backlog[:self.slots]
-        self.backlog = self.backlog[self.slots:]
-        if len({r.prompt_len for r in wave}) > 1:
-            # the dense per-wave cache requires one prompt length; ragged
-            # prompts need paged KV (see ROADMAP repro.serving open items)
-            raise ValueError(
-                "mixed prompt lengths in one prefill wave: "
-                f"{sorted({r.prompt_len for r in wave})}")
-        cost = prefill_cost(self.cfg, len(wave), wave[0].prompt_len,
-                            self.peak_flops)
-        self.pos = wave[0].prompt_len
+        # validate the whole candidate wave BEFORE allocating anything, so
+        # a contract violation cannot leak earlier members' blocks
+        for req in self.backlog[:self.slots]:
+            if self._ctx_budget(req) > self.max_len:
+                raise ValueError(
+                    f"request {req.rid} needs {self._ctx_budget(req)} cache "
+                    f"positions > per-slot budget max_len={self.max_len}")
+        wave: List[Request] = []
+        for req in self.backlog[:self.slots]:
+            if not self.pool.can_fit(self._ctx_budget(req)):
+                break  # pool exhausted: the rest stays queued (FIFO)
+            wave.append(req)
+            self.slot_tables[len(wave) - 1] = self.pool.alloc_for_tokens(
+                self._ctx_budget(req))
+        if not wave:
+            raise PoolExhausted(
+                f"request {self.backlog[0].rid} needs "
+                f"{self.pool.blocks_for(self._ctx_budget(self.backlog[0]))} "
+                f"blocks; pool has {self.pool.n_free} of {self.pool.n_blocks}")
+        self.backlog = self.backlog[len(wave):]
+        cost = prefill_cost_ragged(self.cfg, [r.prompt_len for r in wave],
+                                   self.peak_flops)
         first = self._run_prefill(wave)
         t_end = now + cost.duration
         for i, req in enumerate(wave):
             self.active[i] = req
+            self.slot_lens[i] = self._prefix + req.prompt_len
             self.assign_order.append(req.rid)
             if first is not None:  # prefill emits the first token
                 req.tokens.append(int(first[i]))
@@ -175,52 +260,93 @@ class EngineBase:
                 req.t_first_token = t_end
         for i in range(len(wave), self.slots):
             self.active[i] = None
+            self.slot_lens[i] = 0
         self.n_prefills += 1
-        self._finish_done(t_end)
-        return cost
+        return cost.merge(self._finish_done(t_end))
 
     def decode_step(self, now: float) -> PhaseCost:
         assert self.busy, "decode_step() on an engine with no active slots"
-        n_active = sum(r is not None for r in self.active)
-        cost = decode_cost(self.cfg, n_active, max(self.pos, 1),
-                           self.peak_flops)
+        ctxs = [max(l, 1) for r, l in zip(self.active, self.slot_lens)
+                if r is not None]
+        cost = decode_cost(self.cfg, len(ctxs), ctxs, self.peak_flops)
         toks = self._run_decode()
-        self.pos += 1
         t_end = now + cost.duration
         for i, req in enumerate(self.active):
             if req is None:
                 continue
+            self.slot_lens[i] += 1
             req.tokens.append(int(toks[i]))
             self.slot_tokens[i].append(int(toks[i]))
             if req.t_first_token is None:
                 req.t_first_token = t_end
         self.n_decode_steps += 1
-        self._finish_done(t_end)
-        return cost
+        return cost.merge(self._finish_done(t_end))
 
-    def _finish_done(self, t_end: float) -> None:
-        """Retire finished requests; FIFO slot refill at the shared-prefix
-        boundary when the remaining cache budget covers the newcomer."""
+    def _retire(self, i: int, req: Request, t: float) -> None:
+        req.t_done = t
+        self.completed.append(req)
+        self.active[i] = None
+        self.pool.free(self.slot_tables[i])
+        self.slot_tables[i] = []
+        self.slot_lens[i] = 0
+
+    def _finish_done(self, t_end: float) -> Optional[PhaseCost]:
+        """Retire finished requests and refill their slots per-slot: the
+        newcomer's OWN prompt is prefilled into freshly allocated blocks
+        (FIFO, gated only by pool capacity).  Returns the combined cost of
+        any refill prefills so the caller can bill them into its tick."""
+        extra: Optional[PhaseCost] = None
+        t_cursor = t_end
         for i, req in enumerate(self.active):
             if req is None or not req.done:
                 continue
-            req.t_done = t_end
-            self.completed.append(req)
-            self.active[i] = None
-            if (self.backlog
-                    and self.pos + self.backlog[0].max_new_tokens
-                    <= self.max_len):
-                nxt = self.backlog.pop(0)
+            self._retire(i, req, t_end)
+            # chained refill: a newcomer whose prefill-emitted first token
+            # already exhausts its budget retires immediately and frees the
+            # slot for the next backlog request within the same tick
+            while self.backlog and self._supports_slot_refill():
+                nxt = self.backlog[0]
+                if (self._ctx_budget(nxt) > self.max_len
+                        or not self.pool.can_fit(self._ctx_budget(nxt))):
+                    # exhausted now (retried on the next completion);
+                    # over-budget requests surface as ValueError at the wave
+                    break
+                self.backlog.pop(0)
+                self.slot_tables[i] = self.pool.alloc_for_tokens(
+                    self._ctx_budget(nxt))
+                c = prefill_cost(self.cfg, 1, nxt.prompt_len, self.peak_flops)
+                tok = self._refill_slot(i, nxt)
                 self.active[i] = nxt
+                self.slot_lens[i] = self._prefix + nxt.prompt_len
                 self.assign_order.append(nxt.rid)
+                self.n_refills += 1
+                t_cursor += c.duration  # refills in a tick run sequentially
+                extra = c if extra is None else extra.merge(c)
+                if tok is not None:
+                    nxt.tokens.append(int(tok))
+                    self.slot_tokens[i].append(int(tok))
+                    nxt.t_first_token = t_cursor
+                if not nxt.done:
+                    break
+                self._retire(i, nxt, t_cursor)
+        return extra
 
     # -- model-execution hooks ----------------------------------------------
+    def _supports_slot_refill(self) -> bool:
+        return True
+
     def _run_prefill(self, wave: List[Request]):
-        """Returns per-slot first tokens (len(wave),) or None."""
+        """Seat ``wave`` in slots [0, len(wave)); returns per-slot first
+        tokens (len(wave),) or None."""
         raise NotImplementedError
 
     def _run_decode(self):
         """Returns per-slot next tokens (slots,)."""
+        raise NotImplementedError
+
+    def _refill_slot(self, i: int, req: Request):
+        """Prefill ``req``'s own prompt into slot ``i`` (blocks already
+        allocated).  Returns the request's first token, or None."""
         raise NotImplementedError
 
 
@@ -233,26 +359,59 @@ class PartitionEngine(EngineBase):
     """Runs the actual model.  ``params`` may be shared across engines
     in-process (they are read-only during serving); on hardware each
     partition holds its own replica — the paper's reuse-vs-shaping tradeoff,
-    priced by ``core.partitioning.weight_replica_bytes``."""
+    priced by ``core.partitioning.weight_replica_bytes``.
+
+    ``paged=True`` (default for decoder-only families) stores KV in the
+    block pool and decodes through ``models.transformer.decode_step_paged``;
+    ``paged=False`` keeps the dense ``(L, slots, max_len)`` slab with
+    per-slot lengths — same serving semantics, used as the equivalence
+    oracle.  Enc-dec models keep the dense scalar-len cache and wave-only
+    batching (their decoder cache is rebuilt from the encoder per wave).
+    """
 
     def __init__(self, cfg: ModelConfig, api, params, *, slots: int,
                  max_len: int, pid: int = 0,
                  peak_flops: float = hw.TPU_PEAK_FLOPS, seed: int = 0,
-                 decode_fn=None, prefill_fn=None):
+                 decode_fn=None, prefill_fn=None, prefill_uniform_fn=None,
+                 paged: Optional[bool] = None,
+                 block_size: int = 16, pool_blocks: Optional[int] = None):
         super().__init__(cfg, slots=slots, max_len=max_len, pid=pid,
-                         peak_flops=peak_flops)
+                         peak_flops=peak_flops, block_size=block_size,
+                         pool_blocks=pool_blocks)
         import jax
 
         self.api = api
         self.params = params
+        self.paged = (cfg.family != "encdec") if paged is None else paged
+        if self.paged and cfg.family == "encdec":
+            raise ValueError("paged KV is not supported for enc-dec models")
         # engines may share jitted phase fns (same shapes -> one executable)
-        self._decode_fn = decode_fn or jax.jit(api.decode, donate_argnums=(2,))
-        self._prefill_fn = prefill_fn or (
-            lambda p, b: api.prefill(p, b, max_len=max_len))
-        self.cache = None
+        if self.paged:
+            self._decode_fn = decode_fn or jax.jit(api.decode_paged,
+                                                   donate_argnums=(2,))
+        else:
+            self._decode_fn = decode_fn or jax.jit(api.decode,
+                                                   donate_argnums=(2,))
+        if cfg.family == "encdec":
+            self._prefill_fn = prefill_fn or (
+                lambda p, b, lens=None: api.prefill(p, b, max_len=max_len))
+        else:
+            self._prefill_fn = prefill_fn or jax.jit(
+                lambda p, b, lens: api.prefill(p, b, max_len=max_len,
+                                               lens=lens))
+        # per-length executables (batch-1 slot refills, uniform SSM groups);
+        # shareable across engines like decode_fn so a fleet compiles each
+        # distinct prompt length once, not once per partition
+        self._prefill_uniform_fn = prefill_uniform_fn or jax.jit(
+            lambda p, b, ml: api.prefill(p, b, max_len=ml),
+            static_argnames=("ml",))
+        self.cache = None          # dense mode / encdec
+        self.pages = None          # paged mode: k_pages/v_pages/ssm arrays
         self._last_tok = None
+        self.last_logits = None    # (slots, V) np, for equivalence tests
         self._rng = np.random.default_rng(seed + pid)
 
+    # -- batch assembly ------------------------------------------------------
     def _make_batch(self, prompts: List[np.ndarray]) -> dict:
         import jax.numpy as jnp
 
@@ -267,41 +426,197 @@ class PartitionEngine(EngineBase):
                 (len(prompts), cfg.enc_seq, cfg.d_model), dtype=np.float32))
         return b
 
+    def _has_ssm(self) -> bool:
+        return self.cfg.family in ("ssm", "hybrid")
+
+    # -- prefill paths -------------------------------------------------------
+    def _wave_prefill_cache(self, wave: List[Request]):
+        """Run the wave's prompts, returning (first_logits, dense cache)
+        covering slots [0, len(wave)) with a per-slot ``len`` vector.
+
+        Attention-only families fuse the ragged wave into ONE padded batch
+        (stable shapes -> one executable) — causal masking keeps each
+        slot's last-token logits and cache prefix exact.  SSM-bearing
+        families run one fused batch per distinct length instead: their
+        recurrent state integrates every input position, so in-row padding
+        would corrupt short slots' states.
+        """
+        import jax.numpy as jnp
+
+        lens = np.array([r.prompt_len for r in wave], np.int32)
+        if not self._has_ssm():
+            width = max(int(lens.max()), 1)
+            padded = np.zeros((self.slots, width), np.int32)
+            for i, r in enumerate(wave):
+                padded[i, :r.prompt_len] = np.asarray(r.prompt, np.int32)
+            lens_full = np.concatenate(
+                [lens, np.ones(self.slots - len(wave), np.int32)])
+            logits, cache = self._prefill_fn(
+                self.params, self._make_batch(list(padded)),
+                jnp.asarray(lens_full))
+            return logits, cache
+        # uniform groups (rows padded to full slot width, never in-row)
+        cache = self.api.init_cache(self.slots, self.max_len)
+        logits_out = [None] * len(wave)
+        by_len = {}
+        for i, r in enumerate(wave):
+            by_len.setdefault(r.prompt_len, []).append(i)
+        for plen, idxs in by_len.items():
+            prompts = [np.asarray(wave[i].prompt, np.int32) for i in idxs]
+            while len(prompts) < self.slots:
+                prompts.append(np.zeros(plen, np.int32))
+            lg, cg = self._prefill_uniform_fn(
+                self.params, self._make_batch(prompts), self.max_len)
+            rows = jnp.asarray(idxs, jnp.int32)
+            src = jnp.arange(len(idxs), dtype=jnp.int32)
+            for key in ("k", "v", "ssm_state", "ssm_conv"):
+                if key in cache:
+                    cache[key] = cache[key].at[:, rows].set(cg[key][:, src])
+            cache["len"] = cache["len"].at[rows].set(cg["len"][src])
+            for j, i in enumerate(idxs):
+                logits_out[i] = lg[j]
+        logits = jnp.stack([l for l in logits_out])
+        return logits, cache
+
+    def _install_paged(self, cache, rows: List[int],
+                       src_rows: Optional[List[int]] = None) -> None:
+        """Move batch rows ``src_rows`` (default: ``rows`` themselves) of a
+        dense cache into slots ``rows``: K/V prefixes into the block pool,
+        SSM state into the per-slot arrays.  One scatter per pool array
+        regardless of how many slots are installed."""
+        import jax.numpy as jnp
+
+        from repro.serving import kv_pool as KV
+
+        if self.pages is None:
+            self.pages = KV.init_pages(self.cfg, self.pool.n_blocks,
+                                       self.block_size)
+            if self._has_ssm():
+                st = self.api.init_cache(self.slots, 1)
+                self.pages["ssm_state"] = st["ssm_state"]
+                self.pages["ssm_conv"] = st["ssm_conv"]
+        src = list(src_rows if src_rows is not None else rows)
+        if "k" in cache:
+            tables = np.zeros((len(rows), self.table_width), np.int32)
+            for j, i in enumerate(rows):
+                tables[j, :len(self.slot_tables[i])] = self.slot_tables[i]
+            src_a = jnp.asarray(src, jnp.int32)
+            self.pages.update(KV.write_prefix_pages(
+                {"k_pages": self.pages["k_pages"],
+                 "v_pages": self.pages["v_pages"]},
+                cache["k"][:, src_a], cache["v"][:, src_a],
+                jnp.asarray(tables)))
+        if self._has_ssm():
+            rows_a = jnp.asarray(rows, jnp.int32)
+            src_a = jnp.asarray(src, jnp.int32)
+            self.pages["ssm_state"] = self.pages["ssm_state"].at[
+                :, rows_a].set(cache["ssm_state"][:, src_a])
+            self.pages["ssm_conv"] = self.pages["ssm_conv"].at[
+                :, rows_a].set(cache["ssm_conv"][:, src_a])
+
     def _run_prefill(self, wave: List[Request]):
         import jax.numpy as jnp
 
-        prompts = [r.prompt for r in wave]
-        plen = len(prompts[0])
-        # pad the wave to full slot width so cache/batch shapes are stable
-        # across waves (one compiled executable per engine)
-        while len(prompts) < self.slots:
-            prompts.append(np.zeros(plen, np.int32))
-        logits, self.cache = self._prefill_fn(
-            self.params, self._make_batch(prompts))
-        if logits is None:  # encdec: decoder starts from BOS
+        if self.cfg.family == "encdec":
+            # decoder cache is built from the encoder output; prompts are
+            # not consumed (stub frontend) and batching stays wave-only
+            prompts = [np.asarray(r.prompt, np.int32) for r in wave]
+            width = max(len(p) for p in prompts)
+            prompts = [np.pad(p, (0, width - len(p))) for p in prompts]
+            while len(prompts) < self.slots:
+                prompts.append(np.zeros(width, np.int32))
+            _, self.cache = self._prefill_fn(self.params,
+                                             self._make_batch(prompts))
             self._last_tok = jnp.ones((self.slots, 1), jnp.int32)
             return None
-        self._last_tok = jnp.argmax(logits, axis=-1).reshape(
-            self.slots, 1).astype(jnp.int32)
-        return np.asarray(self._last_tok)[:, 0]
+
+        # seat lens/tables before installing storage (base sets them after
+        # _run_prefill returns, so mirror the assignment here first)
+        for i, req in enumerate(wave):
+            self.slot_lens[i] = self._prefix + req.prompt_len
+        logits, cache = self._wave_prefill_cache(wave)
+        if self.paged:
+            self._install_paged(cache, list(range(len(wave))))
+            self.cache = None
+        else:
+            self.cache = cache
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B,)
+        last = np.ones((self.slots, 1), np.int32)
+        last[:first.shape[0], 0] = np.asarray(first).reshape(-1)[:self.slots]
+        self._last_tok = jnp.asarray(last)
+        return np.asarray(first).reshape(-1)[:len(wave)]
+
+    def _refill_slot(self, i: int, req: Request):
+        import jax.numpy as jnp
+
+        prompt = np.asarray(req.prompt, np.int32)
+        lg, c1 = self._prefill_uniform_fn(
+            self.params, self._make_batch([prompt]),
+            self.max_len if not self.paged else self._prefix + req.prompt_len)
+        self.slot_lens[i] = self._prefix + req.prompt_len
+        if self.paged:
+            self._install_paged(c1, [i], src_rows=[0])
+        else:
+            for key in ("k", "v", "ssm_state", "ssm_conv"):
+                if key in self.cache:
+                    self.cache[key] = self.cache[key].at[:, i].set(c1[key][:, 0])
+            self.cache["len"] = self.cache["len"].at[i].set(c1["len"][0])
+        tok = int(np.asarray(jnp.argmax(lg, axis=-1)).reshape(-1)[0])
+        last = np.asarray(self._last_tok).copy()
+        last[i, 0] = tok
+        self._last_tok = jnp.asarray(last)
+        return tok
+
+    # -- decode --------------------------------------------------------------
+    def _device_lens(self) -> np.ndarray:
+        return np.array([l if r is not None else 0
+                         for r, l in zip(self.active, self.slot_lens)],
+                        np.int32)
 
     def _run_decode(self):
         import jax.numpy as jnp
 
-        logits, self.cache = self._decode_fn(self.params, self._last_tok,
-                                             self.cache)
+        if self.cfg.family == "encdec":
+            logits, self.cache = self._decode_fn(self.params, self._last_tok,
+                                                 self.cache)
+        elif self.paged:
+            tables = np.zeros((self.slots, self.table_width), np.int32)
+            for i, tbl in enumerate(self.slot_tables):
+                if self.active[i] is not None:
+                    tables[i, :len(tbl)] = tbl
+            pcache = dict(self.pages)
+            pcache["tables"] = jnp.asarray(tables)
+            pcache["lens"] = jnp.asarray(self._device_lens())
+            logits, pcache = self._decode_fn(self.params, self._last_tok,
+                                             pcache)
+            self.pages = {k: v for k, v in pcache.items()
+                          if k not in ("tables", "lens")}
+        else:
+            cache = dict(self.cache)
+            cache["len"] = jnp.asarray(self._device_lens())
+            logits, self.cache = self._decode_fn(self.params, self._last_tok,
+                                                 cache)
         self._last_tok = jnp.argmax(logits, axis=-1).astype(
             jnp.int32).reshape(self.slots, 1)
+        self.last_logits = np.asarray(logits, np.float32).reshape(
+            self.slots, -1)
         return np.asarray(self._last_tok)[:, 0]
+
+    def _supports_slot_refill(self) -> bool:
+        return self.cfg.family != "encdec"
 
 
 class SimulatedEngine(EngineBase):
-    """Same slot/backlog/phase state machine, no model execution: tokens are
-    synthetic.  Used by scheduler unit tests and the partitions x policy
-    benchmark sweep, where only phase timing and bandwidth demand matter."""
+    """Same slot/backlog/pool/phase state machine, no model execution:
+    tokens are synthetic.  Used by scheduler unit tests and the partitions
+    x policy benchmark sweep, where only phase timing, pool accounting, and
+    bandwidth demand matter."""
 
     def _run_prefill(self, wave):
         return np.arange(len(wave)) + 1
 
     def _run_decode(self):
         return np.full(self.slots, 1 + (self.n_decode_steps % 7))
+
+    def _refill_slot(self, i, req):
+        return 1 + (self.n_refills % 7)

@@ -1,0 +1,148 @@
+"""Paged KV-cache pool: block-table allocator + page scatter/gather helpers.
+
+The dense per-wave cache (one ``(L, B, max_len, Hkv, D)`` slab per engine)
+couples every slot to one prompt length and one write position, which is why
+the seed engine raised on ragged prefill waves and absorbed refilled
+requests at the shared-prefix boundary.  Paged storage breaks the coupling:
+the engine owns a pool of fixed-size token blocks (``block_size`` tokens
+each, all layers of one block stored together), every slot holds a *block
+table* — the ordered list of block ids backing its context — and a per-slot
+length.  Slots with different prompt lengths or chain histories share one
+pool; freeing a slot returns its blocks for immediate reuse.
+
+Two layers live here:
+
+  * ``BlockPool`` — host-side free-list accounting.  Pure bookkeeping (no
+    jax), shared by the real and the simulated engine so admission /
+    exhaustion behaviour is identical with and without model execution.
+    Block id 0 is reserved as the *null block*: inactive decode slots point
+    their tables at it so their (masked, discarded) cache writes land
+    somewhere harmless.
+  * jnp page helpers — ``init_pages`` / ``write_prefix_pages`` create and
+    fill the device-resident page arrays
+    ``(L, n_blocks, block_size, Hkv, D)`` at prefill time.  The decode-time
+    hot path (per-token append + gather) lives in
+    ``models.layers.attention_decode_paged``; the Pallas kernel in
+    ``repro.kernels.paged_attention`` streams the same layout without the
+    dense gather.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Sequence
+
+NULL_BLOCK = 0
+
+
+class PoolExhausted(RuntimeError):
+    """Raised when an allocation cannot be satisfied; the caller must keep
+    the request queued rather than silently truncating its context."""
+
+
+class BlockPool:
+    """Free-list allocator over ``n_blocks`` blocks of ``block_size`` tokens.
+
+    Invariants (pinned by the property tests in ``tests/test_kv_pool.py``):
+    a live block id is never handed out twice, ``free`` rejects ids that are
+    not live, and exhaustion raises ``PoolExhausted`` instead of returning a
+    short allocation.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int):
+        if n_blocks < 1:
+            raise ValueError("n_blocks must be >= 1 (block 0 is the null block)")
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        # id 0 reserved: inactive slots park their writes there
+        self._free: List[int] = list(range(1, n_blocks))
+        self._live: set = set()
+
+    # -- capacity ------------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_live(self) -> int:
+        return len(self._live)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks needed to hold ``n_tokens`` cache positions."""
+        return max(int(math.ceil(n_tokens / self.block_size)), 1)
+
+    def can_fit(self, n_tokens: int) -> bool:
+        return self.blocks_for(n_tokens) <= self.n_free
+
+    # -- alloc / free --------------------------------------------------------
+    def alloc(self, n: int) -> List[int]:
+        """Pop ``n`` blocks off the free list; all-or-nothing."""
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} blocks")
+        if n > len(self._free):
+            raise PoolExhausted(
+                f"requested {n} blocks, {len(self._free)} free "
+                f"(pool of {self.n_blocks}, block_size={self.block_size})")
+        out, self._free = self._free[:n], self._free[n:]
+        self._live.update(out)
+        return out
+
+    def alloc_for_tokens(self, n_tokens: int) -> List[int]:
+        return self.alloc(self.blocks_for(n_tokens))
+
+    def free(self, blocks: Sequence[int]) -> None:
+        for b in blocks:
+            if b == NULL_BLOCK:
+                continue
+            if b not in self._live:
+                raise ValueError(f"block {b} is not live (double free?)")
+            self._live.remove(b)
+            self._free.append(b)
+
+
+# ---------------------------------------------------------------------------
+# device-side page arrays (jax imported lazily: SimulatedEngine never needs it)
+# ---------------------------------------------------------------------------
+
+
+def init_pages(cfg, n_blocks: int, block_size: int, dtype=None) -> Dict:
+    """Page arrays ``k/v: (L, n_blocks, block_size, Hkv, D)``; empty dict for
+    attention-free families (their recurrent state is per-slot already)."""
+    import jax.numpy as jnp
+
+    if cfg.family == "ssm":
+        return {}
+    dt = dtype or jnp.dtype(cfg.dtype)
+    shape = (cfg.n_layers, n_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
+    return {"k_pages": jnp.zeros(shape, dt), "v_pages": jnp.zeros(shape, dt)}
+
+
+def write_prefix_pages(pages: Dict, k, v, tables) -> Dict:
+    """Scatter a batch of dense per-slot K/V prefixes into their blocks —
+    ONE scatter per pool array, however many slots are installed.
+
+    k/v: ``(L, B, S, Hkv, D)`` dense rows; ``tables``: ``(B, T)`` int32
+    block chains, null-padded.  Whole blocks are written: positions past a
+    slot's length carry garbage that per-slot length masking hides until
+    decode appends overwrite it, and null-padded table entries land
+    harmlessly in the null block (which no live slot ever reads).
+    """
+    import jax.numpy as jnp
+
+    kp, vp = pages["k_pages"], pages["v_pages"]
+    bs = kp.shape[2]
+    L, B, S, Hkv, D = k.shape
+    T = tables.shape[1]
+    pad = T * bs - S
+    if pad < 0:
+        k, v = k[:, :, :T * bs], v[:, :, :T * bs]
+        pad = 0
+    widths = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+    k_blk = jnp.pad(k, widths).reshape(L, B * T, bs, Hkv, D)
+    v_blk = jnp.pad(v, widths).reshape(L, B * T, bs, Hkv, D)
+    idx = jnp.asarray(tables, jnp.int32).reshape(-1)
+    return {
+        "k_pages": kp.at[:, idx].set(k_blk.astype(kp.dtype)),
+        "v_pages": vp.at[:, idx].set(v_blk.astype(vp.dtype)),
+    }

@@ -1,0 +1,108 @@
+"""BlockPool allocator invariants: alloc/free round-trips never double-
+assign a block, exhaustion is a hard report (never a silent truncation),
+and freed blocks are immediately reusable.  Property tests run through the
+optional-hypothesis shim; the plain tests pin the same invariants without
+it."""
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.serving.kv_pool import NULL_BLOCK, BlockPool, PoolExhausted
+
+
+# ---------------------------------------------------------------------------
+# plain unit tests (always run)
+# ---------------------------------------------------------------------------
+
+
+def test_null_block_reserved_and_capacity():
+    pool = BlockPool(9, 4)
+    assert pool.n_free == 8          # block 0 is the null block
+    assert pool.blocks_for(1) == 1
+    assert pool.blocks_for(4) == 1
+    assert pool.blocks_for(5) == 2
+    assert pool.can_fit(32) and not pool.can_fit(33)
+
+
+def test_alloc_unique_and_never_null():
+    pool = BlockPool(17, 8)
+    got = pool.alloc(16)
+    assert len(got) == 16 == len(set(got))
+    assert NULL_BLOCK not in got
+
+
+def test_exhaustion_raises_and_leaves_pool_intact():
+    pool = BlockPool(5, 8)
+    live = pool.alloc(3)
+    with pytest.raises(PoolExhausted):
+        pool.alloc(2)                # only 1 free: all-or-nothing
+    assert pool.n_free == 1          # the failed alloc took nothing
+    pool.free(live)
+    assert pool.n_free == 4
+
+
+def test_freed_blocks_are_reusable():
+    pool = BlockPool(5, 8)
+    a = pool.alloc(4)
+    pool.free(a)
+    b = pool.alloc(4)
+    assert sorted(a) == sorted(b)
+
+
+def test_double_free_and_foreign_free_rejected():
+    pool = BlockPool(6, 8)
+    a = pool.alloc(2)
+    pool.free(a)
+    with pytest.raises(ValueError):
+        pool.free(a)                 # already free
+    with pytest.raises(ValueError):
+        pool.free([5])               # never allocated
+    pool.free([NULL_BLOCK])          # the null block is always a no-op
+
+
+# ---------------------------------------------------------------------------
+# property tests (model-based alloc/free interleaving)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(2, 48),
+       st.lists(st.integers(0, 12), min_size=1, max_size=60))
+@settings(max_examples=60, deadline=None)
+def test_alloc_free_round_trip_invariants(n_blocks, sizes):
+    """Random alloc/free interleavings: no block is ever live twice, the
+    free count always balances, and exhaustion is all-or-nothing."""
+    pool = BlockPool(n_blocks, 4)
+    live = []
+    for step, k in enumerate(sizes):
+        if step % 3 == 2 and live:           # free the oldest allocation
+            pool.free(live.pop(0))
+        else:
+            before = pool.n_free
+            try:
+                got = pool.alloc(k)
+            except PoolExhausted:
+                assert k > before            # only a true shortfall raises
+                assert pool.n_free == before  # ...and takes nothing
+                continue
+            assert len(got) == k and NULL_BLOCK not in got
+            assert not set(got) & {b for g in live for b in g}
+            live.append(got)
+        flat = [b for g in live for b in g]
+        assert len(flat) == len(set(flat))   # never double-assigned
+        assert pool.n_free + len(flat) == n_blocks - 1
+    for g in live:
+        pool.free(g)
+    assert pool.n_free == n_blocks - 1 and pool.n_live == 0
+
+
+@given(st.lists(st.integers(1, 6), min_size=1, max_size=20))
+@settings(max_examples=40, deadline=None)
+def test_free_then_realloc_conserves_identity(sizes):
+    """Every freed block returns to circulation: allocating after freeing
+    everything always yields the same id universe."""
+    pool = BlockPool(32, 4)
+    universe = set(pool.alloc(31))
+    pool.free(sorted(universe))
+    for k in sizes:
+        got = pool.alloc(k)
+        assert set(got) <= universe
+        pool.free(got)

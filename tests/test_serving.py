@@ -83,10 +83,58 @@ def test_slot_refill_preserves_order_and_completes_all():
     # refill actually happened: more requests served than prefill waves
     # could seat (2 slots/wave), so some slots were handed on mid-wave
     assert eng.n_prefills < len(done) / 2 + 1
+    assert eng.n_refills == 5          # 7 requests, 2 wave seats
     # later submissions never finish before earlier ones start decoding
     t_done = [r.t_done for r in done]
     assert all(a <= b + 1e-12 for a, b in zip(t_done, t_done[1:]))
     assert m.completed_tokens == 7 * 4
+    # per-slot refill: a refilled request's first token comes from its OWN
+    # slot prefill — strictly after the slot freed, by at least one
+    # single-prompt prefill duration (never the shared wave boundary)
+    dur = prefill_cost(cfg, 1, 8, eng.peak_flops).duration
+    by_rid = {r.rid: r for r in done}
+    for rid in range(2, 7):
+        pred = by_rid[rid - 2]         # previous occupant of the same slot
+        assert by_rid[rid].t_first_token >= \
+            pred.t_done + dur * (1 - 1e-9)
+    # every block went back to the pool once the fleet drained
+    assert eng.pool.n_live == 0
+
+
+def test_refill_completing_on_first_token_retires_immediately():
+    """A refilled request whose prefill-emitted first token exhausts its
+    budget (max_new_tokens=1) must retire in the same tick — never decode
+    past its budget — and its slot chains to the next backlog request."""
+    cfg = _cfg()
+    q = RequestQueue()
+    rng = np.random.default_rng(0)
+    for gen in (1, 6, 1, 1, 2):
+        q.submit(rng.integers(1, 100, size=(8,)).astype(np.int32), gen)
+    eng = _fleet(cfg, 1, slots=2, max_len=64)[0]
+    PhaseStaggeredScheduler([eng], q, policy="none").run(max_ticks=200)
+    done = sorted(q.completed, key=lambda r: r.rid)
+    assert len(done) == 5
+    assert all(len(r.tokens) == r.max_new_tokens for r in done)
+    assert eng.assign_order == sorted(eng.assign_order)
+    assert eng.pool.n_live == 0
+
+
+def test_refill_ttft_prices_own_prompt_not_wave():
+    """Two waves of different prompt lengths: the refilled (longer) request
+    pays ITS prompt's prefill in TTFT, not the seated wave's."""
+    cfg = _cfg()
+    q = RequestQueue()
+    _load(q, 2, prompt_len=8, gen=4)
+    _load(q, 1, prompt_len=32, gen=4)
+    eng = _fleet(cfg, 1, slots=2, max_len=64)[0]
+    PhaseStaggeredScheduler([eng], q, policy="none").run(max_ticks=200)
+    done = {r.rid: r for r in q.completed}
+    assert len(done) == 3 and eng.n_refills == 1
+    long_dur = prefill_cost(cfg, 1, 32, eng.peak_flops).duration
+    short_dur = prefill_cost(cfg, 1, 8, eng.peak_flops).duration
+    gap = done[2].t_first_token - done[0].t_done
+    assert gap >= long_dur * (1 - 1e-9)   # billed its own 32-token prefill
+    assert long_dur > 2 * short_dur       # ...which is not the wave's price
 
 
 # ---------------------------------------------------------------------------
