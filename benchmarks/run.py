@@ -1,5 +1,8 @@
 """Benchmark harness: one entry per paper table/figure + the roofline
-report.  Prints ``name,us_per_call,derived`` CSV rows (see common.py)."""
+report.  Prints ``name,us_per_call,derived`` CSV rows (see common.py) and
+writes the machine-readable ``BENCH_serving.json`` artifact (throughput,
+TTFT/TPOT percentiles, bw-demand mean/std per serving scenario) so the
+perf trajectory is tracked PR over PR."""
 from __future__ import annotations
 
 import traceback
@@ -22,7 +25,8 @@ def main() -> None:
         (fig5_partition_sweep.run, ("optimized",)),
         (fig6_traffic_trace.run, ()),
         (serving_shaping.run, ()),
-        (serving_shaping.run_ragged, ()),   # paged per-slot batching path
+        (serving_shaping.run_ragged, ()),    # paged per-slot batching path
+        (serving_shaping.run_clock_gap, ()),  # event-vs-lockstep clock axis
         (roofline_report.run, ()),
     ]:
         name = f"{fn.__module__}.{fn.__name__}"
@@ -32,6 +36,9 @@ def main() -> None:
             failures.append((name, e))
             print(f"{name},0.0,ERROR:{e}")
             traceback.print_exc()
+    if serving_shaping.SCENARIOS:
+        out = serving_shaping.write_bench_json()
+        print(f"# wrote {out} ({len(serving_shaping.SCENARIOS)} scenarios)")
     if failures:
         raise SystemExit(f"{len(failures)} benchmark(s) failed: "
                          f"{[f[0] for f in failures]}")

@@ -1,38 +1,69 @@
-"""Serving analogue of the paper's Fig. 5: partitions x stagger-policy sweep.
+"""Serving analogue of the paper's Fig. 5: partitions x policy x clock sweep.
 
-Two measurements per (P, policy) cell, both against the P=1 synchronous
+Measurements per (P, policy, clock) cell, against the P=1 synchronous
 baseline on the identical request load:
-  * the scheduler itself (SimulatedEngine fleet, no model execution):
-    virtual-clock throughput and the aggregate bandwidth-demand std of the
-    tick trace — the behaviour of the real engine's control loop;
+  * the live scheduler (SimulatedEngine fleet, no model execution) under
+    BOTH virtual clocks — lockstep ticks (the regression oracle) and the
+    event-driven contention timeline (``--clock`` axis): virtual-clock
+    throughput and the aggregate bandwidth-demand std of the span trace;
   * the contention-aware fluid simulation (``serving_trace_report``) — the
     Fig. 5 methodology transferred to interleaved prefill/decode traces.
 
-CSV contract: ``name,us_per_call,derived`` (see common.py).
+``run_clock_gap`` is the headline scenario for the event clock: on a
+wave-granular load (every wave start passes through the stagger policy)
+the staggered policies' virtual throughput under lockstep under-reports
+the fluid simulation badly, while the event clock closes the gap — and
+the staggered bandwidth-demand std stays below the P=1 synchronous
+baseline on the event clock (the serving Fig. 5 analogue, live).
+
+CSV contract: ``name,us_per_call,derived`` (see common.py).  Every cell's
+full metric set is also accumulated in ``SCENARIOS`` and written to
+``BENCH_serving.json`` by ``write_bench_json`` (called by ``run.py`` and
+by ``main``) so the perf trajectory is machine-tracked PR over PR.
 
   PYTHONPATH=src python -m benchmarks.serving_shaping --smoke
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from pathlib import Path
 
 import numpy as np
 
 from repro.configs import get_config
 from repro.core import hw
-from repro.serving import (PhaseStaggeredScheduler, RequestQueue,
-                           SimulatedEngine, serving_trace_report)
+from repro.serving import (EventScheduler, RequestQueue, SimulatedEngine,
+                           make_scheduler, serving_trace_report)
+from repro.serving.engine import decode_cost, prefill_cost
 from repro.serving.trace_sim import phase_balanced_bandwidth
 
 from .common import record
 
 PLIST = [1, 2, 4, 8]
 POLICIES = ["none", "uniform", "demand"]
+CLOCKS = ["lockstep", "event"]
+
+# per-cell metric dicts for the BENCH_serving.json artifact
+SCENARIOS: dict = {}
+
+
+def _note(name: str, m, extra: dict | None = None) -> None:
+    """Accumulate one scenario cell for the JSON artifact."""
+    SCENARIOS[name] = {**m.summary(), **(extra or {})}
+
+
+def write_bench_json(path: str | Path = "BENCH_serving.json") -> Path:
+    """Write every recorded scenario cell as machine-readable JSON."""
+    path = Path(path)
+    path.write_text(json.dumps(SCENARIOS, indent=1, sort_keys=True) + "\n")
+    return path
 
 
 def _sched_metrics(cfg, *, partitions, policy, total_slots, n_requests,
-                   prompt_len, gen, bandwidth, ragged=False):
+                   prompt_len, gen, bandwidth, ragged=False,
+                   clock="lockstep", wave_only=False):
     rng = np.random.default_rng(0)
     queue = RequestQueue()
     lens = _ragged_lens(prompt_len, n_requests) if ragged \
@@ -43,20 +74,30 @@ def _sched_metrics(cfg, *, partitions, policy, total_slots, n_requests,
     slots = max(total_slots // partitions, 1)
     engines = [SimulatedEngine(cfg, slots=slots,
                                max_len=prompt_len + 4 * gen, pid=p,
-                               peak_flops=hw.TPU_PEAK_FLOPS / partitions)
+                               peak_flops=hw.TPU_PEAK_FLOPS / partitions,
+                               wave_only=wave_only)
                for p in range(partitions)]
-    sched = PhaseStaggeredScheduler(engines, queue, policy=policy,
-                                    bandwidth=bandwidth)
+    sched = make_scheduler(engines, queue, policy=policy,
+                           bandwidth=bandwidth, clock=clock)
     m = sched.run()
     assert len(queue.completed) == n_requests, \
         f"only {len(queue.completed)}/{n_requests} served"
-    return m
+    return sched, m
 
 
 def _ragged_lens(prompt_len, n):
     """Cyclic mixed prompt lengths around ``prompt_len`` (paged-path load)."""
     base = [max(prompt_len // 2, 4), max(3 * prompt_len // 4, 4), prompt_len]
     return [base[i % len(base)] for i in range(n)]
+
+
+def _wave_time(cfg, *, partitions, total_slots, prompt_len, gen):
+    """Unconstrained duration of one prefill+decode wave per partition."""
+    slots = max(total_slots // partitions, 1)
+    peak = hw.TPU_PEAK_FLOPS / partitions
+    pre = prefill_cost(cfg, slots, prompt_len, peak)
+    dec = decode_cost(cfg, slots, prompt_len + gen // 2, peak)
+    return pre.duration + gen * dec.duration
 
 
 def run(arch: str = "qwen2-7b", smoke: bool = True, n_requests: int = 64,
@@ -66,25 +107,40 @@ def run(arch: str = "qwen2-7b", smoke: bool = True, n_requests: int = 64,
                                   prompt_len=prompt_len, gen=gen)
     kw = dict(total_slots=total_slots, n_requests=n_requests,
               prompt_len=prompt_len, gen=gen)
-    base = _sched_metrics(cfg, partitions=1, policy="none", bandwidth=bw,
-                          **kw)
+    base = {}
+    for clock in CLOCKS:
+        _, base[clock] = _sched_metrics(cfg, partitions=1, policy="none",
+                                        bandwidth=bw, clock=clock, **kw)
+        _note(f"serving_shaping.{cfg.name}.P1.none.{clock}", base[clock])
     for P in PLIST:
         for policy in POLICIES:
             if P == 1 and policy != "none":
                 continue
-            t0 = time.perf_counter()
-            m = _sched_metrics(cfg, partitions=P, policy=policy,
-                               bandwidth=bw, **kw)
             rep = serving_trace_report(cfg, partitions=P, policy=policy,
                                        bandwidth=bw, **kw)
-            us = (time.perf_counter() - t0) * 1e6
-            record(
-                f"serving_shaping.{cfg.name}.P{P}.{policy}", us,
-                f"tok_s_rel={m.throughput() / base.throughput():.3f};"
-                f"demand_std_rel={m.bw_demand_std / max(base.bw_demand_std, 1e-15):.3f};"
-                f"sim_std_rel={rep['std_rel']:.3f};"
-                f"sim_bw_mean_rel={rep['mean_rel']:.3f};"
-                f"sim_perf_rel={rep['perf_rel']:.3f}")
+            for clock in CLOCKS:
+                if P == 1:
+                    m, us = base[clock], 0.0
+                else:
+                    t0 = time.perf_counter()
+                    _, m = _sched_metrics(cfg, partitions=P, policy=policy,
+                                          bandwidth=bw, clock=clock, **kw)
+                    us = (time.perf_counter() - t0) * 1e6
+                b = base[clock]
+                name = f"serving_shaping.{cfg.name}.P{P}.{policy}.{clock}"
+                record(
+                    name, us,
+                    f"tok_s_rel={m.throughput() / b.throughput():.3f};"
+                    f"demand_std_rel="
+                    f"{m.bw_demand_std / max(b.bw_demand_std, 1e-15):.3f};"
+                    f"sim_std_rel={rep['std_rel']:.3f};"
+                    f"sim_bw_mean_rel={rep['mean_rel']:.3f};"
+                    f"sim_perf_rel={rep['perf_rel']:.3f}")
+                if P > 1:
+                    _note(name, m, {
+                        "tok_s_rel": m.throughput() / b.throughput(),
+                        "sim_std_rel": rep["std_rel"],
+                        "sim_perf_rel": rep["perf_rel"]})
 
 
 def run_ragged(arch: str = "qwen2-7b", smoke: bool = True,
@@ -98,23 +154,82 @@ def run_ragged(arch: str = "qwen2-7b", smoke: bool = True,
                                   prompt_len=prompt_len, gen=gen)
     kw = dict(total_slots=total_slots, n_requests=n_requests,
               prompt_len=prompt_len, gen=gen, ragged=True)
-    t0 = time.perf_counter()
-    base = _sched_metrics(cfg, partitions=1, policy="none", bandwidth=bw,
-                          **kw)
-    base_us = (time.perf_counter() - t0) * 1e6
-    cells = [(1, "none", base, base_us)]
-    for policy in POLICIES:
+    for clock in CLOCKS:
         t0 = time.perf_counter()
-        m = _sched_metrics(cfg, partitions=4, policy=policy, bandwidth=bw,
-                           **kw)
-        cells.append((4, policy, m, (time.perf_counter() - t0) * 1e6))
-    for P, policy, m, us in cells:
-        record(
-            f"serving_shaping_ragged.{cfg.name}.P{P}.{policy}", us,
-            f"tok_s_rel={m.throughput() / base.throughput():.3f};"
-            f"demand_std_rel="
-            f"{m.bw_demand_std / max(base.bw_demand_std, 1e-15):.3f};"
-            f"ttft_p95={m.percentiles(m.ttft())['p95']:.3e}")
+        _, base = _sched_metrics(cfg, partitions=1, policy="none",
+                                 bandwidth=bw, clock=clock, **kw)
+        base_us = (time.perf_counter() - t0) * 1e6
+        cells = [(1, "none", base, base_us)]
+        for policy in POLICIES:
+            t0 = time.perf_counter()
+            _, m = _sched_metrics(cfg, partitions=4, policy=policy,
+                                  bandwidth=bw, clock=clock, **kw)
+            cells.append((4, policy, m, (time.perf_counter() - t0) * 1e6))
+        for P, policy, m, us in cells:
+            name = (f"serving_shaping_ragged.{cfg.name}.P{P}.{policy}"
+                    f".{clock}")
+            record(
+                name, us,
+                f"tok_s_rel={m.throughput() / base.throughput():.3f};"
+                f"demand_std_rel="
+                f"{m.bw_demand_std / max(base.bw_demand_std, 1e-15):.3f};"
+                f"ttft_p95={m.percentiles(m.ttft())['p95']:.3e}")
+            _note(name, m,
+                  {"tok_s_rel": m.throughput() / base.throughput()})
+
+
+def run_clock_gap(arch: str = "qwen2-7b", smoke: bool = True,
+                  n_requests: int = 64, total_slots: int = 16,
+                  prompt_len: int = 32, gen: int = 16):
+    """The event-clock headline: wave-granular load (``wave_only`` engines,
+    so every wave start is policy-gated, as in the paper's Fig. 5), P=4
+    demand-staggered.  Reports, per clock, virtual throughput relative to
+    that clock's P=1 synchronous baseline next to the fluid simulation's
+    ``perf_rel`` — the event clock sits close to the simulation where
+    lockstep under-reports — plus the steady-state (one wave trimmed per
+    end) bandwidth-demand std relative to the P=1 baseline, which drops
+    below 1 only for the staggered policies."""
+    cfg = get_config(arch, smoke=smoke)
+    bw = phase_balanced_bandwidth(cfg, total_slots=total_slots,
+                                  prompt_len=prompt_len, gen=gen)
+    kw = dict(total_slots=total_slots, n_requests=n_requests,
+              prompt_len=prompt_len, gen=gen)
+    trim1 = _wave_time(cfg, partitions=1, total_slots=total_slots,
+                       prompt_len=prompt_len, gen=gen)
+    trim4 = 1.5 * _wave_time(cfg, partitions=4, total_slots=total_slots,
+                             prompt_len=prompt_len, gen=gen)
+    base = {}
+    for clock in CLOCKS:
+        _, base[clock] = _sched_metrics(cfg, partitions=1, policy="none",
+                                        bandwidth=bw, clock=clock,
+                                        wave_only=True, **kw)
+    for policy in ("none", "demand"):
+        rep = serving_trace_report(cfg, partitions=4, policy=policy,
+                                   bandwidth=bw, **kw)
+        for clock in CLOCKS:
+            t0 = time.perf_counter()
+            sched, m = _sched_metrics(cfg, partitions=4, policy=policy,
+                                      bandwidth=bw, clock=clock,
+                                      wave_only=True, **kw)
+            us = (time.perf_counter() - t0) * 1e6
+            b = base[clock]
+            tok_rel = m.throughput() / b.throughput()
+            std_rel = (m.bw_stats(trim=trim4)[1]
+                       / max(b.bw_stats(trim=trim1)[1], 1e-15))
+            extra = {"tok_s_rel": tok_rel, "demand_std_rel_trimmed": std_rel,
+                     "sim_perf_rel": rep["perf_rel"],
+                     "gap_vs_sim": abs(tok_rel - rep["perf_rel"])}
+            if isinstance(sched, EventScheduler):
+                am, astd = sched.achieved_bw_stats(trim=trim4)
+                extra["achieved_bw_mean"] = am
+                extra["achieved_bw_std"] = astd
+            name = f"serving_clock_gap.{cfg.name}.P4.{policy}.{clock}"
+            record(name, us,
+                   f"tok_s_rel={tok_rel:.3f};"
+                   f"sim_perf_rel={rep['perf_rel']:.3f};"
+                   f"gap_vs_sim={abs(tok_rel - rep['perf_rel']):.3f};"
+                   f"demand_std_rel_trimmed={std_rel:.3f}")
+            _note(name, m, extra)
 
 
 def main(argv=None):
@@ -128,6 +243,8 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--uniform-only", action="store_true",
                     help="skip the ragged-prompt (paged-path) scenario")
+    ap.add_argument("--json", default="BENCH_serving.json",
+                    help="path for the machine-readable metrics artifact")
     args = ap.parse_args(argv)
     n_req = args.requests or (48 if args.smoke else 256)
     print("name,us_per_call,derived")
@@ -137,6 +254,11 @@ def main(argv=None):
         run_ragged(args.arch, smoke=args.smoke, n_requests=n_req,
                    total_slots=args.slots, prompt_len=args.prompt_len,
                    gen=args.gen)
+    run_clock_gap(args.arch, smoke=args.smoke, n_requests=n_req,
+                  total_slots=args.slots, prompt_len=args.prompt_len,
+                  gen=args.gen)
+    out = write_bench_json(args.json)
+    print(f"# wrote {out} ({len(SCENARIOS)} scenarios)")
 
 
 if __name__ == "__main__":

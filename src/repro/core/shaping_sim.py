@@ -18,6 +18,13 @@ whose unconstrained demand exceeds the pipe single-handedly.
 Asynchrony: partitions start phase-shifted (``stagger``) or with explicitly
 optimized offsets (``repro.core.schedule``); contention itself then keeps
 them decorrelated (the paper's statistical premise).
+
+The event loop itself lives in ``repro.core.timeline``
+(``ContentionTimeline``): ``simulate`` and ``simulate_tasks`` are thin
+wrappers that chain per-partition task spans on that shared clock — the
+same clock the live serving scheduler (``serving.scheduler
+.EventScheduler``) runs on, so simulated and served timelines are the one
+contention model.
 """
 from __future__ import annotations
 
@@ -27,6 +34,8 @@ from typing import List, Sequence
 import numpy as np
 
 from repro.core import hw
+from repro.core.timeline import (ContentionTimeline, bin_bw_samples,
+                                 maxmin_fair)
 
 # Achieved-FLOPs efficiency per layer kind and conv input re-read
 # amplification (blocked conv re-reads input tiles; Yang et al., the paper's
@@ -70,40 +79,11 @@ def tasks_from_traces(traces, batch: int, cores: int,
     return out
 
 
-def _bin_bw_samples(bw_samples, t_end: float, window: float):
-    """Resample (t_start, t_end, bytes/s) spans into fixed windows."""
-    edges = np.arange(0.0, t_end + window, window)
-    bw_win = np.zeros(max(len(edges) - 1, 1))
-    for (a, bnd, v) in bw_samples:
-        i0 = min(int(a / window), len(bw_win) - 1)
-        i1 = min(int(bnd / window), len(bw_win) - 1)
-        if i0 == i1:
-            bw_win[i0] += v * (bnd - a) / window
-        else:
-            bw_win[i0] += v * ((i0 + 1) * window - a) / window
-            for i in range(i0 + 1, i1):
-                bw_win[i] += v
-            bw_win[i1] += v * (bnd - i1 * window) / window
-    return edges, bw_win
-
-
-def maxmin_fair(demands: np.ndarray, cap: float) -> np.ndarray:
-    """Max-min fair allocation of ``cap`` among flows wanting ``demands``."""
-    alloc = np.zeros_like(demands)
-    active = demands > 0
-    remaining = cap
-    while active.any() and remaining > 1e-9:
-        share = remaining / active.sum()
-        sat = active & (demands - alloc <= share + 1e-18)
-        if sat.any():
-            grant = (demands - alloc)[sat]
-            alloc[sat] += grant
-            remaining -= grant.sum()
-            active &= ~sat
-        else:
-            alloc[active] += share
-            remaining = 0.0
-    return alloc
+# Re-exported for back-compat: the fluid event loop now lives in
+# ``repro.core.timeline`` (one clock under this simulator AND the live
+# ``serving.scheduler.EventScheduler``); this module keeps the paper-facing
+# task construction and Fig. 4/5/6 reporting.
+_bin_bw_samples = bin_bw_samples
 
 
 @dataclass
@@ -162,62 +142,36 @@ def simulate(traces, *, partitions: int, total_batch: int,
     else:  # uniform
         off = np.arange(P) * pass_time / P
 
-    # partition state: current task idx, remaining full-speed seconds,
-    # passes completed; negative idx encodes initial idle offset
-    idx = np.zeros(P, int)
-    rem = np.array([tasks[0].dur] * P)
-    delay = off.copy()  # initial idle time before starting
+    # per-partition state on the shared timeline: each partition cycles
+    # through the task list; completion callbacks start the next task and
+    # stamp pass boundaries
     passes_done = np.zeros(P, int)
     first_pass_t = np.full(P, np.nan)
     last_pass_t = np.full(P, np.nan)
 
-    t = 0.0
+    tlc = ContentionTimeline(bandwidth)
+
+    def _start(p: int, i: int) -> None:
+        def _done(_sp, t_now: float) -> None:
+            j = i + 1
+            if j == n_tasks:
+                j = 0
+                passes_done[p] += 1
+                if passes_done[p] == 1:
+                    first_pass_t[p] = t_now
+                last_pass_t[p] = t_now
+            _start(p, j)
+        tlc.start(tasks[i].dur, tasks[i].byts, key=p, on_complete=_done)
+
+    for p in range(P):
+        tlc.call_at(off[p], lambda _t, p=p: _start(p, 0))
+
     max_t = pass_time * (n_passes + 2) * 3  # hard stop
-    bw_samples = []  # (t_start, t_end, aggregate_bw)
-
-    while passes_done.min() < n_passes and t < max_t:
-        running = delay <= 1e-15
-        demands = np.array([tasks[idx[p]].demand if running[p] else 0.0
-                            for p in range(P)])
-        alloc = maxmin_fair(demands, bandwidth)
-        # progress rate: fraction of full speed each partition achieves
-        speed = np.ones(P)
-        for p in range(P):
-            if running[p] and demands[p] > 0:
-                speed[p] = min(1.0, alloc[p] / demands[p])
-        # time to next event
-        dt_candidates = []
-        for p in range(P):
-            if not running[p]:
-                dt_candidates.append(delay[p])
-            elif speed[p] > 1e-12:
-                dt_candidates.append(rem[p] / speed[p])
-            else:
-                dt_candidates.append(np.inf)
-        dt = max(min(dt_candidates), 1e-15)
-
-        bw_now = float(sum(alloc[p] for p in range(P) if running[p]))
-        bw_samples.append((t, t + dt, bw_now))
-
-        # advance
-        for p in range(P):
-            if not running[p]:
-                delay[p] -= dt
-            else:
-                rem[p] -= dt * speed[p]
-                if rem[p] <= 1e-12:
-                    idx[p] += 1
-                    if idx[p] == n_tasks:
-                        idx[p] = 0
-                        passes_done[p] += 1
-                        if passes_done[p] == 1:
-                            first_pass_t[p] = t + dt
-                        last_pass_t[p] = t + dt
-                    rem[p] = tasks[idx[p]].dur
-        t += dt
+    t = tlc.run(until=max_t,
+                stop=lambda: passes_done.min() >= n_passes)
 
     # resample into fixed windows
-    edges, bw_win = _bin_bw_samples(bw_samples, t, window)
+    edges, bw_win = _bin_bw_samples(tlc.bw_samples, t, window)
     # trim warmup/cooldown windows (first/last pass)
     lo = min(int(pass_time / window) + 1, max(len(bw_win) - 2, 0))
     hi = max(len(bw_win) - lo, lo + 1)
@@ -262,53 +216,15 @@ def simulate_tasks(tasklists: Sequence[Sequence[Task]], *,
     if window is None:
         window = max(span / 400.0, 1e-12)
 
-    idx = np.zeros(P, int)
     n_tasks = np.array([len(tl) for tl in tasklists])
-    rem = np.array([tl[0].dur if len(tl) else 0.0 for tl in tasklists])
-    delay = off.copy()
-    done = idx >= n_tasks
+    tlc = ContentionTimeline(bandwidth)
+    for p, tl in enumerate(tasklists):
+        tlc.run_chain(tl, offset=float(off[p]), key=p)
 
-    t = 0.0
     max_t = (span + off.max()) * (P + 2) * 3  # hard stop
-    bw_samples = []
-    while not done.all() and t < max_t:
-        running = (~done) & (delay <= 1e-15)
-        demands = np.array([tasklists[p][idx[p]].demand if running[p] else 0.0
-                            for p in range(P)])
-        alloc = maxmin_fair(demands, bandwidth)
-        speed = np.ones(P)
-        dt_candidates = []
-        for p in range(P):
-            if done[p]:
-                continue
-            if not running[p]:
-                dt_candidates.append(delay[p])
-            else:
-                if demands[p] > 0:
-                    speed[p] = min(1.0, alloc[p] / demands[p])
-                if speed[p] > 1e-12:
-                    dt_candidates.append(rem[p] / speed[p])
-                else:
-                    dt_candidates.append(np.inf)
-        dt = max(min(dt_candidates), 1e-15)
-        bw_samples.append((t, t + dt, float(alloc[running].sum())))
+    t = tlc.run(until=max_t)
 
-        for p in range(P):
-            if done[p]:
-                continue
-            if not running[p]:
-                delay[p] -= dt
-            else:
-                rem[p] -= dt * speed[p]
-                if rem[p] <= 1e-12:
-                    idx[p] += 1
-                    if idx[p] >= n_tasks[p]:
-                        done[p] = True
-                    else:
-                        rem[p] = tasklists[p][idx[p]].dur
-        t += dt
-
-    edges, bw_win = _bin_bw_samples(bw_samples, t, window)
+    edges, bw_win = _bin_bw_samples(tlc.bw_samples, t, window)
     centers = (edges[:-1] + window / 2) if len(edges) > 1 else np.zeros(1)
     if trim > 0:
         keep = (centers > trim) & (centers < t - trim)

@@ -1,0 +1,212 @@
+"""Shared contention timeline: the max-min-fair fluid event clock.
+
+One memory pipe, many in-flight *spans*.  A span is a unit of work with a
+full-speed duration (FLOPs at the owner's compute rate) and a byte volume;
+while in flight it demands ``byts / duration`` bytes/s.  At every event —
+a span starting, a span finishing, a timer firing — bandwidth is
+re-allocated max-min fair across whatever is in flight, and each span's
+progress is integrated at ``min(1, alloc / demand)`` of full speed until
+the next event.  Spans therefore *stretch* under contention exactly as in
+the paper's fluid model (§4): the queueing effect of Fig. 3(b) falls out
+of the allocation, not out of any per-consumer modelling.
+
+This module is the single timing substrate for both evaluation paths:
+
+  * ``core.shaping_sim.simulate`` / ``simulate_tasks`` — the paper's
+    Fig. 4/5/6 simulator — drive per-partition task chains over one
+    timeline (each task-completion callback starts the next task);
+  * ``serving.scheduler.EventScheduler`` — the live serving clock — issues
+    each partition's prefill/decode op as an independent span, so a
+    partition finishes its decode step and immediately starts the next
+    while a neighbour is still mid-prefill.
+
+The recorded observable is ``bw_samples``: piecewise-constant
+(t_start, t_end, aggregate allocated bytes/s) segments between events,
+resampled into fixed windows by ``bin_bw_samples`` for the mean/std
+shaping metrics.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+# Epsilons shared with the pre-refactor loops in ``core.shaping_sim`` (the
+# equivalence tests pin bit-comparable traces, so these are load-bearing).
+_EPS_DONE = 1e-12   # remaining work below this completes the span
+_EPS_TIME = 1e-15   # minimum event step / timer-due slack
+_EPS_SPEED = 1e-12  # progress rates below this stall (infinite finish time)
+
+
+def maxmin_fair(demands: np.ndarray, cap: float) -> np.ndarray:
+    """Max-min fair allocation of ``cap`` among flows wanting ``demands``."""
+    alloc = np.zeros_like(demands)
+    active = demands > 0
+    remaining = cap
+    while active.any() and remaining > 1e-9:
+        share = remaining / active.sum()
+        sat = active & (demands - alloc <= share + 1e-18)
+        if sat.any():
+            grant = (demands - alloc)[sat]
+            alloc[sat] += grant
+            remaining -= grant.sum()
+            active &= ~sat
+        else:
+            alloc[active] += share
+            remaining = 0.0
+    return alloc
+
+
+def bin_bw_samples(bw_samples, t_end: float, window: float):
+    """Resample (t_start, t_end, bytes/s) spans into fixed windows."""
+    edges = np.arange(0.0, t_end + window, window)
+    bw_win = np.zeros(max(len(edges) - 1, 1))
+    for (a, bnd, v) in bw_samples:
+        i0 = min(int(a / window), len(bw_win) - 1)
+        i1 = min(int(bnd / window), len(bw_win) - 1)
+        if i0 == i1:
+            bw_win[i0] += v * (bnd - a) / window
+        else:
+            bw_win[i0] += v * ((i0 + 1) * window - a) / window
+            for i in range(i0 + 1, i1):
+                bw_win[i] += v
+            bw_win[i1] += v * (bnd - i1 * window) / window
+    return edges, bw_win
+
+
+@dataclass
+class Span:
+    """One in-flight unit of work on the shared pipe."""
+    duration: float                 # seconds at full compute speed
+    byts: float                     # bytes to move while running
+    key: object = None              # caller tag (partition id, op kind, ...)
+    on_complete: Optional[Callable[["Span", float], None]] = None
+    t_start: float = 0.0
+    t_end: float = 0.0              # filled at completion
+    rem: float = 0.0                # remaining full-speed seconds
+    alloc: float = 0.0              # bytes/s granted in the current segment
+
+    @property
+    def demand(self) -> float:      # bytes/s wanted when compute-bound
+        return self.byts / max(self.duration, 1e-15)
+
+
+class ContentionTimeline:
+    """Event-driven fluid clock over one bandwidth pipe.
+
+    ``start()`` puts a span in flight at the current time; ``call_at()``
+    schedules a callback (used for stagger offsets and policy release
+    timers).  ``step()`` advances to the next event; ``run()`` drives the
+    clock until idle, a deadline, or a caller predicate.  Completion
+    callbacks run *after* the clock has advanced to the completion instant
+    and may start new spans or timers — re-allocation picks them up at the
+    next step.
+    """
+
+    def __init__(self, bandwidth: float):
+        self.bandwidth = float(bandwidth)
+        self.now = 0.0
+        self.spans: List[Span] = []                  # in flight, start order
+        self.bw_samples: List[Tuple[float, float, float]] = []
+        self._timers: List[Tuple[float, int, Callable[[float], None]]] = []
+        self._seq = 0
+        self.n_completed = 0
+
+    # -- issue ---------------------------------------------------------------
+    def start(self, duration: float, byts: float, *, key: object = None,
+              on_complete: Optional[Callable] = None) -> Span:
+        """Put a span in flight starting now."""
+        sp = Span(duration=float(duration), byts=float(byts), key=key,
+                  on_complete=on_complete, t_start=self.now,
+                  rem=float(duration))
+        self.spans.append(sp)
+        return sp
+
+    def call_at(self, t: float, fn: Callable[[float], None]) -> None:
+        """Schedule ``fn(now)`` at absolute time ``t`` (>= now)."""
+        heapq.heappush(self._timers, (float(t), self._seq, fn))
+        self._seq += 1
+
+    @property
+    def idle(self) -> bool:
+        return not self.spans and not self._timers
+
+    # -- advance -------------------------------------------------------------
+    def _fire_due(self) -> None:
+        while self._timers and self._timers[0][0] <= self.now + _EPS_TIME:
+            _, _, fn = heapq.heappop(self._timers)
+            fn(self.now)
+
+    def step(self) -> bool:
+        """Advance to the next event; returns False when nothing is left."""
+        self._fire_due()
+        if self.idle:
+            return False
+        demands = np.array([sp.demand for sp in self.spans])
+        alloc = maxmin_fair(demands, self.bandwidth)
+        dt_candidates = []
+        for sp, d, a in zip(self.spans, demands, alloc):
+            speed = min(1.0, a / d) if d > 0 else 1.0
+            sp.alloc = float(a)
+            sp._speed = speed
+            if speed > _EPS_SPEED:
+                dt_candidates.append(sp.rem / speed)
+            else:
+                dt_candidates.append(np.inf)
+        for (t_fire, _, _) in self._timers:
+            dt_candidates.append(t_fire - self.now)
+        dt = max(min(dt_candidates), _EPS_TIME)
+
+        self.bw_samples.append((self.now, self.now + dt, float(alloc.sum())))
+        self.now += dt
+        still, done = [], []
+        for sp in self.spans:
+            sp.rem -= dt * sp._speed
+            (done if sp.rem <= _EPS_DONE else still).append(sp)
+        self.spans = still
+        for sp in done:
+            sp.t_end = self.now
+            self.n_completed += 1
+            if sp.on_complete is not None:
+                sp.on_complete(sp, self.now)
+        return True
+
+    def run(self, *, until: Optional[float] = None,
+            stop: Optional[Callable[[], bool]] = None,
+            max_events: Optional[int] = None) -> float:
+        """Drive until idle / ``until`` / ``stop()`` / ``max_events``."""
+        n = 0
+        while True:
+            if until is not None and self.now >= until:
+                break
+            if stop is not None and stop():
+                break
+            if not self.step():
+                break
+            n += 1
+            if max_events is not None and n >= max_events:
+                break
+        return self.now
+
+    # -- chained task lists (the simulator's partition model) ---------------
+    def run_chain(self, tasks, *, offset: float = 0.0, key: object = None,
+                  on_task_done: Optional[Callable] = None) -> None:
+        """Run ``tasks`` (objects with .dur/.byts) sequentially as spans,
+        starting after ``offset`` seconds.  ``on_task_done(i, t)`` fires as
+        each task completes (pass/tasklist bookkeeping for the wrappers)."""
+        tasks = list(tasks)
+        if not tasks:
+            return
+
+        def _start(i: int) -> None:
+            def _done(_sp: Span, t: float) -> None:
+                if on_task_done is not None:
+                    on_task_done(i, t)
+                if i + 1 < len(tasks):
+                    _start(i + 1)
+            self.start(tasks[i].dur, tasks[i].byts, key=key,
+                       on_complete=_done)
+
+        self.call_at(self.now + offset, lambda _t: _start(0))

@@ -3,12 +3,15 @@
 P partition engines (the paper's compute-unit partitions, applied to one
 serving device) run phase-staggered continuous batching under the
 traffic-shaping scheduler; each partition gets 1/P of the compute while all
-share one HBM pipe.  Prints throughput, latency percentiles, the aggregate
-bandwidth-demand std, and the fluid-simulation validation of the shaping
-claim (P staggered vs P=1 synchronous on the identical request load).
+share one HBM pipe.  ``--clock`` picks the virtual clock: the event-driven
+contention timeline (default; op overlap is fluid-model exact) or the
+legacy lockstep tick (the regression oracle).  Prints throughput, latency
+percentiles, the aggregate bandwidth-demand std, and the fluid-simulation
+validation of the shaping claim (P staggered vs P=1 synchronous on the
+identical request load).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
-      --partitions 4 --stagger demand
+      --partitions 4 --stagger demand --clock event
 """
 from __future__ import annotations
 
@@ -20,9 +23,9 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import hw
 from repro.models import api as mapi
-from repro.serving import (PartitionEngine, PhaseStaggeredScheduler,
-                           RequestQueue, decode_cost, prefill_cost,
-                           serving_trace_report)
+from repro.serving import (CLOCKS, EventScheduler, PartitionEngine,
+                           RequestQueue, decode_cost, make_scheduler,
+                           prefill_cost, serving_trace_report)
 from repro.serving.trace_sim import phase_balanced_bandwidth
 
 
@@ -38,6 +41,13 @@ def main(argv=None):
     ap.add_argument("--partitions", type=int, default=1)
     ap.add_argument("--stagger", default="uniform",
                     choices=["none", "uniform", "demand"])
+    ap.add_argument("--clock", default="event", choices=list(CLOCKS),
+                    help="virtual clock: 'event' overlaps partition ops on "
+                         "the contention timeline (fluid-model-accurate "
+                         "timing; the default), 'lockstep' advances the "
+                         "fleet tick-by-tick (a long prefill stretches the "
+                         "tick for every partition — quantized, but the "
+                         "pre-event-clock regression oracle)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged KV pool block size (tokens)")
     ap.add_argument("--dense", action="store_true",
@@ -51,9 +61,18 @@ def main(argv=None):
                     help="skip the serving-trace shaping validation")
     args = ap.parse_args(argv)
 
+    # validate the fleet shape BEFORE any model/config work so a bad flag
+    # fails with a clear message instead of a downstream crash
+    if args.partitions < 1:
+        ap.error(f"--partitions must be >= 1 (got {args.partitions}): the "
+                 "fleet needs at least one partition engine")
+    if args.batch < 1:
+        ap.error(f"--batch must be >= 1 (got {args.batch}): each partition "
+                 "needs at least one decode slot")
+    if args.requests < 1:
+        ap.error(f"--requests must be >= 1 (got {args.requests})")
+
     cfg = get_config(args.arch, smoke=args.smoke)
-    if args.partitions < 1 or args.batch < 1:
-        ap.error("--partitions and --batch must be >= 1")
     P = args.partitions
     slots = args.batch
     peak_per_part = hw.TPU_PEAK_FLOPS / P  # partitions split one device
@@ -105,12 +124,13 @@ def main(argv=None):
     # smoke-scale models put both phases past the physical HBM number
     bandwidth = phase_balanced_bandwidth(
         cfg, total_slots=P * slots, prompt_len=args.prompt_len, gen=args.gen)
-    sched = PhaseStaggeredScheduler(engines, queue, policy=args.stagger,
-                                    bandwidth=bandwidth)
+    sched = make_scheduler(engines, queue, policy=args.stagger,
+                           bandwidth=bandwidth, clock=args.clock)
     m = sched.run()
     s = m.summary()
     print(f"serve: {cfg.name} P={P} stagger={args.stagger} "
-          f"slots={P}x{slots} completed={s['requests_completed']}"
+          f"clock={args.clock} slots={P}x{slots} "
+          f"completed={s['requests_completed']}"
           f"/{queue.n_submitted} rejected={queue.n_rejected}")
     print(f"  throughput: {s['tok_per_s_virtual']:.1f} tok/s (virtual) "
           f"{s['tok_per_s_wall']:.1f} tok/s (wall)")
@@ -120,6 +140,10 @@ def main(argv=None):
     print(f"  bw demand: mean={s['bw_demand_mean']/1e9:.1f} GB/s "
           f"std={s['bw_demand_std']/1e9:.2f} GB/s "
           f"(pipe {bandwidth/1e9:.0f} GB/s)")
+    if isinstance(sched, EventScheduler):
+        am, astd = sched.achieved_bw_stats()
+        print(f"  bw achieved (event clock): mean={am/1e9:.1f} GB/s "
+              f"std={astd/1e9:.2f} GB/s over {len(sched.trace)} spans")
 
     if not args.no_sim:
         rep = serving_trace_report(

@@ -1,28 +1,34 @@
 """Partition-asynchronous serving engine.
 
 The paper's traffic-shaping idea applied to LM serving: P partition engines
-(``engine.PartitionEngine``) run phase-staggered continuous batching under
-``scheduler.PhaseStaggeredScheduler`` so compute-bound prefill and
-bandwidth-bound decode interleave across partitions instead of aligning.
-``queue`` handles admission/deadlines, ``kv_pool`` owns the paged KV-cache
-block pool behind per-slot continuous batching, ``metrics`` the
-observables, and ``trace_sim`` validates the std-reduction claim with the
-Fig. 5 fluid simulation.
+(``engine.PartitionEngine``) run phase-staggered continuous batching so
+compute-bound prefill and bandwidth-bound decode interleave across
+partitions instead of aligning.  Two virtual clocks drive the fleet
+(``scheduler.make_scheduler``): ``EventScheduler`` overlaps every
+partition's op on the shared ``core.timeline`` contention clock
+(fluid-model-exact timing, the default), ``PhaseStaggeredScheduler`` is
+the legacy lockstep tick (regression oracle).  ``queue`` handles
+admission/deadlines, ``kv_pool`` owns the paged KV-cache block pool behind
+per-slot continuous batching, ``metrics`` observes per-span demand, and
+``trace_sim`` validates the std-reduction claim with the Fig. 5 fluid
+simulation on the very same timeline.
 """
-from repro.serving.engine import (EngineBase, PartitionEngine, PhaseCost,
-                                  SimulatedEngine, decode_cost, prefill_cost,
-                                  prefill_cost_ragged)
+from repro.serving.engine import (EngineBase, PartitionEngine, PendingOp,
+                                  PhaseCost, SimulatedEngine, decode_cost,
+                                  prefill_cost, prefill_cost_ragged)
 from repro.serving.kv_pool import BlockPool, PoolExhausted
 from repro.serving.metrics import ServingMetrics
 from repro.serving.queue import Request, RequestQueue
-from repro.serving.scheduler import (POLICIES, PhaseStaggeredScheduler,
-                                     TickRecord)
+from repro.serving.scheduler import (CLOCKS, POLICIES, EventScheduler,
+                                     PhaseStaggeredScheduler, SpanRecord,
+                                     TickRecord, make_scheduler)
 from repro.serving.trace_sim import serving_tasklists, serving_trace_report
 
 __all__ = [
-    "EngineBase", "PartitionEngine", "PhaseCost", "SimulatedEngine",
-    "decode_cost", "prefill_cost", "prefill_cost_ragged", "BlockPool",
-    "PoolExhausted", "ServingMetrics", "Request", "RequestQueue", "POLICIES",
-    "PhaseStaggeredScheduler", "TickRecord", "serving_tasklists",
+    "EngineBase", "PartitionEngine", "PendingOp", "PhaseCost",
+    "SimulatedEngine", "decode_cost", "prefill_cost", "prefill_cost_ragged",
+    "BlockPool", "PoolExhausted", "ServingMetrics", "Request", "RequestQueue",
+    "CLOCKS", "POLICIES", "EventScheduler", "PhaseStaggeredScheduler",
+    "SpanRecord", "TickRecord", "make_scheduler", "serving_tasklists",
     "serving_trace_report",
 ]

@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import math
 from collections import Counter
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import lru_cache
 from typing import List, Optional, Sequence, Union
 
@@ -139,6 +139,21 @@ def decode_cost(cfg: ModelConfig, batch: int,
                              batch, peak_flops, extra_bytes=kv)
 
 
+@dataclass
+class PendingOp:
+    """An issued-but-uncommitted phase op.
+
+    Device execution is eager (it happened at issue), but the virtual-time
+    effects — first-token stamps, retirement, slot refill — wait for the
+    clock to decide when the op actually ends.  The lockstep clock commits
+    immediately at ``issue_time + cost.duration``; the event clock commits
+    at the contention-stretched completion event."""
+    kind: str                 # "prefill" | "decode"
+    cost: PhaseCost
+    stamp_first: List[Request] = field(default_factory=list)
+    # requests whose first token was emitted by this op (stamped at commit)
+
+
 # ---------------------------------------------------------------------------
 # engine base: slot/backlog/pool state machine (model-execution agnostic)
 # ---------------------------------------------------------------------------
@@ -152,8 +167,18 @@ class EngineBase:
       assign(requests)   — extend this partition's FIFO backlog
       wants_prefill      — drained of active work but has backlog
       busy               — at least one active slot
-      prefill_wave(now)  -> PhaseCost   (only when wants_prefill)
-      decode_step(now)   -> PhaseCost   (only when busy)
+      issue_prefill()    -> PendingOp   (only when wants_prefill)
+      issue_decode()     -> PendingOp   (only when busy)
+      commit_op(op, t)   -> Optional[PhaseCost]  (refill cost, if any)
+      prefill_wave(now)  -> PhaseCost   (issue+commit at now+duration)
+      decode_step(now)   -> PhaseCost   (issue+commit at now+duration)
+
+    ``issue_*`` runs the model and mutates slot state eagerly (the next op
+    cannot be issued before the previous one commits, so ordering is safe);
+    ``commit_op`` applies the time-dependent effects at the clock-chosen
+    end instant and returns any refill-prefill cost triggered by requests
+    that completed in the op.  The one-shot ``prefill_wave``/``decode_step``
+    wrappers preserve the original lockstep semantics exactly.
 
     Per-slot state: ``slot_lens[i]`` is slot i's context length (cache
     write position, prefix tokens included) and ``slot_tables[i]`` its
@@ -163,13 +188,21 @@ class EngineBase:
 
     def __init__(self, cfg: ModelConfig, *, slots: int, max_len: int,
                  pid: int = 0, peak_flops: float = hw.TPU_PEAK_FLOPS,
-                 block_size: int = 16, pool_blocks: Optional[int] = None):
+                 block_size: int = 16, pool_blocks: Optional[int] = None,
+                 wave_only: bool = False):
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
         self.pid = pid
         self.peak_flops = peak_flops
         self.block_size = block_size
+        # wave-only batching: freed slots wait for the engine to drain and
+        # the next *policy-granted* prefill wave instead of refilling
+        # immediately (the enc-dec behaviour, also the load shape of the
+        # paper's Fig. 5 — every wave start passes through the stagger
+        # policy, so phase shaping binds for the whole run, not just at
+        # startup)
+        self.wave_only = wave_only
         # default pool: every slot can hold a full max_len chain (+ null)
         n_blocks = pool_blocks or \
             1 + slots * int(math.ceil(max_len / block_size))
@@ -223,9 +256,9 @@ class EngineBase:
             ctxs = [max(self._prefix + plen, 1)] * self.slots
         return decode_cost(self.cfg, len(ctxs), ctxs, self.peak_flops)
 
-    # -- phase execution -----------------------------------------------------
-    def prefill_wave(self, now: float) -> PhaseCost:
-        assert self.wants_prefill, "prefill_wave() on a busy/idle engine"
+    # -- phase execution: issue (eager) / commit (clock-timed) ---------------
+    def issue_prefill(self) -> PendingOp:
+        assert self.wants_prefill, "issue_prefill() on a busy/idle engine"
         # validate the whole candidate wave BEFORE allocating anything, so
         # a contract violation cannot leak earlier members' blocks
         for req in self.backlog[:self.slots]:
@@ -249,7 +282,6 @@ class EngineBase:
         cost = prefill_cost_ragged(self.cfg, [r.prompt_len for r in wave],
                                    self.peak_flops)
         first = self._run_prefill(wave)
-        t_end = now + cost.duration
         for i, req in enumerate(wave):
             self.active[i] = req
             self.slot_lens[i] = self._prefix + req.prompt_len
@@ -257,20 +289,20 @@ class EngineBase:
             if first is not None:  # prefill emits the first token
                 req.tokens.append(int(first[i]))
                 self.slot_tokens[i].append(int(first[i]))
-                req.t_first_token = t_end
         for i in range(len(wave), self.slots):
             self.active[i] = None
             self.slot_lens[i] = 0
         self.n_prefills += 1
-        return cost.merge(self._finish_done(t_end))
+        return PendingOp("prefill", cost,
+                         list(wave) if first is not None else [])
 
-    def decode_step(self, now: float) -> PhaseCost:
-        assert self.busy, "decode_step() on an engine with no active slots"
+    def issue_decode(self) -> PendingOp:
+        assert self.busy, "issue_decode() on an engine with no active slots"
         ctxs = [max(l, 1) for r, l in zip(self.active, self.slot_lens)
                 if r is not None]
         cost = decode_cost(self.cfg, len(ctxs), ctxs, self.peak_flops)
         toks = self._run_decode()
-        t_end = now + cost.duration
+        firsts: List[Request] = []
         for i, req in enumerate(self.active):
             if req is None:
                 continue
@@ -278,9 +310,29 @@ class EngineBase:
             req.tokens.append(int(toks[i]))
             self.slot_tokens[i].append(int(toks[i]))
             if req.t_first_token is None:
-                req.t_first_token = t_end
+                firsts.append(req)
         self.n_decode_steps += 1
-        return cost.merge(self._finish_done(t_end))
+        return PendingOp("decode", cost, firsts)
+
+    def commit_op(self, pending: PendingOp,
+                  t_end: float) -> Optional[PhaseCost]:
+        """Apply the op's time-dependent effects at its end instant: stamp
+        first tokens, retire completed requests, refill freed slots.
+        Returns the combined cost of any refill prefills (the caller bills
+        them into its tick or schedules them as a follow-on span)."""
+        for req in pending.stamp_first:
+            if req.t_first_token is None:
+                req.t_first_token = t_end
+        return self._finish_done(t_end)
+
+    # -- one-shot wrappers (lockstep clock + direct use in tests) ------------
+    def prefill_wave(self, now: float) -> PhaseCost:
+        pend = self.issue_prefill()
+        return pend.cost.merge(self.commit_op(pend, now + pend.cost.duration))
+
+    def decode_step(self, now: float) -> PhaseCost:
+        pend = self.issue_decode()
+        return pend.cost.merge(self.commit_op(pend, now + pend.cost.duration))
 
     def _retire(self, i: int, req: Request, t: float) -> None:
         req.t_done = t
@@ -333,7 +385,7 @@ class EngineBase:
 
     # -- model-execution hooks ----------------------------------------------
     def _supports_slot_refill(self) -> bool:
-        return True
+        return not self.wave_only
 
     def _run_prefill(self, wave: List[Request]):
         """Seat ``wave`` in slots [0, len(wave)); returns per-slot first
@@ -374,10 +426,11 @@ class PartitionEngine(EngineBase):
                  peak_flops: float = hw.TPU_PEAK_FLOPS, seed: int = 0,
                  decode_fn=None, prefill_fn=None, prefill_uniform_fn=None,
                  paged: Optional[bool] = None,
-                 block_size: int = 16, pool_blocks: Optional[int] = None):
+                 block_size: int = 16, pool_blocks: Optional[int] = None,
+                 wave_only: bool = False):
         super().__init__(cfg, slots=slots, max_len=max_len, pid=pid,
                          peak_flops=peak_flops, block_size=block_size,
-                         pool_blocks=pool_blocks)
+                         pool_blocks=pool_blocks, wave_only=wave_only)
         import jax
 
         self.api = api
@@ -603,7 +656,7 @@ class PartitionEngine(EngineBase):
         return np.asarray(self._last_tok)[:, 0]
 
     def _supports_slot_refill(self) -> bool:
-        return self.cfg.family != "encdec"
+        return self.cfg.family != "encdec" and not self.wave_only
 
 
 class SimulatedEngine(EngineBase):

@@ -1,10 +1,16 @@
-"""Serving observables: per-tick bandwidth demand + request latencies.
+"""Serving observables: per-span bandwidth demand + request latencies.
 
-The tick trace is the serving analogue of the paper's Fig. 1 bandwidth
-curve: aggregate *unconstrained* HBM demand of all partitions per scheduler
-tick, time-weighted.  Its mean/std are the shaping metrics the stagger
-policies are judged on; TTFT/TPOT/throughput are the serving-quality side
-of the tradeoff.  All times are virtual seconds on the scheduler clock.
+The span trace is the serving analogue of the paper's Fig. 1 bandwidth
+curve: each observed span is one op's (t_start, duration, unconstrained
+HBM demand).  Under the lockstep clock spans are the scheduler's ticks
+(contiguous, non-overlapping — ``observe_tick`` is kept as a shim); under
+the event clock every partition's op is its own span and spans *overlap*.
+Statistics are computed on the piecewise-constant overlay of all spans —
+aggregate demand between span boundaries, time-weighted — which reduces
+exactly to the old per-tick weighting when spans do not overlap.  Mean/std
+of that overlay are the shaping metrics the stagger policies are judged
+on; TTFT/TPOT/throughput are the serving-quality side of the tradeoff.
+All times are virtual seconds on the scheduler clock.
 """
 from __future__ import annotations
 
@@ -18,35 +24,74 @@ from repro.serving.queue import Request
 
 @dataclass
 class ServingMetrics:
-    ticks: List[Tuple[float, float, float]] = field(default_factory=list)
-    # (t_start, dt, aggregate_demand_bytes_per_s)
+    spans: List[Tuple[float, float, float]] = field(default_factory=list)
+    # (t_start, duration, unconstrained_demand_bytes_per_s)
     requests: List[Request] = field(default_factory=list)
     wall_seconds: float = 0.0
     virtual_seconds: float = 0.0
 
+    def observe_span(self, t: float, dt: float, demand: float) -> None:
+        self.spans.append((t, dt, demand))
+
     def observe_tick(self, t: float, dt: float, demand: float) -> None:
-        self.ticks.append((t, dt, demand))
+        """Legacy per-tick API (lockstep clock): a tick is just a span."""
+        self.observe_span(t, dt, demand)
+
+    @property
+    def ticks(self) -> List[Tuple[float, float, float]]:
+        """Back-compat alias for the span trace."""
+        return self.spans
 
     def observe_request(self, req: Request) -> None:
         self.requests.append(req)
 
-    # -- bandwidth-demand statistics (time-weighted over ticks) -------------
-    def _weighted(self) -> Tuple[np.ndarray, np.ndarray]:
-        if not self.ticks:
+    # -- bandwidth-demand statistics (time-weighted span overlay) -----------
+    def _weighted(self, trim: float = 0.0) -> Tuple[np.ndarray, np.ndarray]:
+        """Aggregate-demand value + width per overlay segment: the span
+        boundaries cut time into segments, each segment's demand is the sum
+        of the spans covering it.  Non-overlapping spans (lockstep ticks)
+        reduce to the per-tick (demand, dt) weighting unchanged.  ``trim``
+        drops segments whose centre lies within that many seconds of either
+        end of the observed range (warmup/cooldown exclusion, as the fluid
+        simulator does per pass)."""
+        if not self.spans:
             return np.zeros(1), np.ones(1)
-        arr = np.asarray(self.ticks)
-        return arr[:, 2], np.maximum(arr[:, 1], 1e-15)
+        arr = np.asarray(self.spans)
+        t0 = arr[:, 0]
+        t1 = arr[:, 0] + np.maximum(arr[:, 1], 1e-15)
+        edges = np.unique(np.concatenate([t0, t1]))
+        if len(edges) < 2:
+            return arr[:, 2], np.maximum(arr[:, 1], 1e-15)
+        vals = np.zeros(len(edges) - 1)
+        for a, b, d in zip(t0, t1, arr[:, 2]):
+            i0 = np.searchsorted(edges, a, side="left")
+            i1 = np.searchsorted(edges, b, side="left")
+            vals[i0:i1] += d
+        widths = np.diff(edges)
+        keep = widths > 1e-18
+        if trim > 0:
+            centers = (edges[:-1] + edges[1:]) / 2
+            inner = (centers > edges[0] + trim) & (centers < edges[-1] - trim)
+            if (keep & inner).sum() >= 4:
+                keep &= inner
+        if not keep.any():
+            return vals, np.maximum(widths, 1e-15)
+        return vals[keep], widths[keep]
+
+    def bw_stats(self, trim: float = 0.0) -> Tuple[float, float]:
+        """(mean, std) of the aggregate-demand overlay, optionally with the
+        warmup/cooldown ``trim`` applied — the serving Fig. 5 observable."""
+        v, w = self._weighted(trim)
+        m = np.average(v, weights=w)
+        return float(m), float(np.sqrt(np.average((v - m) ** 2, weights=w)))
 
     @property
     def bw_demand_mean(self) -> float:
-        v, w = self._weighted()
-        return float(np.average(v, weights=w))
+        return self.bw_stats()[0]
 
     @property
     def bw_demand_std(self) -> float:
-        v, w = self._weighted()
-        m = np.average(v, weights=w)
-        return float(np.sqrt(np.average((v - m) ** 2, weights=w)))
+        return self.bw_stats()[1]
 
     # -- latency / throughput ----------------------------------------------
     def _done(self) -> List[Request]:
@@ -84,14 +129,15 @@ class ServingMetrics:
         return self.completed_tokens / max(den, 1e-12)
 
     def summary(self) -> Dict[str, float]:
+        bw_mean, bw_std = self.bw_stats()  # one overlay build for both
         return {
             "requests_completed": len(self._done()),
             "tokens": self.completed_tokens,
             "virtual_s": self.virtual_seconds,
             "tok_per_s_virtual": self.throughput(),
             "tok_per_s_wall": self.throughput(wall=True),
-            "bw_demand_mean": self.bw_demand_mean,
-            "bw_demand_std": self.bw_demand_std,
+            "bw_demand_mean": bw_mean,
+            "bw_demand_std": bw_std,
             "deadline_misses": self.deadline_misses,
             **{f"ttft_{k}": v for k, v in
                self.percentiles(self.ttft()).items()},

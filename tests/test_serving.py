@@ -166,6 +166,23 @@ def test_none_policy_aligns_phases():
     assert len(q.completed) == 32
 
 
+def test_stall_fallback_spacing_state_scoped_to_demand_policy():
+    """The forward-progress fallback in ``step`` must only touch the
+    demand policy's ``_last_wave_start`` spacing state: under none/uniform
+    the fallback (and normal operation) leaves it untouched, so switching
+    a fleet between policies cannot inherit stale demand spacing."""
+    cfg = _cfg()
+    for policy, touched in [("none", False), ("uniform", False),
+                            ("demand", True)]:
+        q = RequestQueue()
+        _load(q, 8, gen=3)
+        sched = PhaseStaggeredScheduler(_fleet(cfg, 2), q, policy=policy)
+        sched.run(max_ticks=500)
+        assert len(q.completed) == 8
+        assert bool(sched._last_wave_start > -float("inf")) == touched, \
+            policy
+
+
 @pytest.mark.parametrize("policy", ["uniform", "demand"])
 def test_staggered_policies_interleave_phases_more(policy):
     """The scheduler's job is phase mixing: staggered policies spend more
