@@ -1,0 +1,89 @@
+"""Diff two ``BENCH_serving.json`` artifacts; fail on perf regression.
+
+Compares the scenario cells written by ``benchmarks.serving_shaping``
+(directly or via ``benchmarks.run``) and exits non-zero when any scenario's
+**virtual** throughput (``tok_per_s_virtual``) drops by more than the
+threshold (default 10%) against the baseline, or when a baseline scenario
+disappeared.  Only virtual-clock metrics are compared — wall-clock numbers
+depend on the machine and would make the gate flaky.
+
+CI runs the ``--smoke`` bench and compares it against the committed
+baseline (the committed ``BENCH_serving.json`` is the ``--smoke`` artifact
+for exactly this reason):
+
+  PYTHONPATH=src python -m benchmarks.serving_shaping --smoke \
+      --json BENCH_smoke.json
+  PYTHONPATH=src python -m benchmarks.compare BENCH_serving.json \
+      BENCH_smoke.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+KEY = "tok_per_s_virtual"
+
+
+def compare(baseline: Dict[str, dict], candidate: Dict[str, dict], *,
+            threshold: float = 0.10, key: str = KEY,
+            ) -> Tuple[List[str], List[str]]:
+    """Returns (failures, notes).  A failure is a scenario whose ``key``
+    regressed by more than ``threshold`` relative to baseline, or a
+    baseline scenario missing from the candidate.  New candidate scenarios
+    are informational."""
+    failures: List[str] = []
+    notes: List[str] = []
+    for name in sorted(baseline):
+        if name not in candidate:
+            failures.append(f"{name}: missing from candidate")
+            continue
+        b, c = baseline[name].get(key), candidate[name].get(key)
+        if b is None or c is None:
+            notes.append(f"{name}: no {key} field; skipped")
+            continue
+        if b <= 0:
+            notes.append(f"{name}: baseline {key}={b}; skipped")
+            continue
+        rel = c / b - 1.0
+        line = f"{name}: {key} {b:.6g} -> {c:.6g} ({rel:+.1%})"
+        if rel < -threshold:
+            failures.append(line)
+        else:
+            notes.append(line)
+    for name in sorted(set(candidate) - set(baseline)):
+        notes.append(f"{name}: new scenario (no baseline)")
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two BENCH_serving.json files; exit 1 on a "
+                    f">threshold {KEY} regression")
+    ap.add_argument("baseline", type=Path)
+    ap.add_argument("candidate", type=Path)
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="max tolerated fractional drop (default 0.10)")
+    ap.add_argument("--key", default=KEY,
+                    help=f"scenario metric to gate on (default {KEY})")
+    ap.add_argument("--quiet", action="store_true",
+                    help="print failures only")
+    args = ap.parse_args(argv)
+    baseline = json.loads(args.baseline.read_text())
+    candidate = json.loads(args.candidate.read_text())
+    failures, notes = compare(baseline, candidate,
+                              threshold=args.threshold, key=args.key)
+    if not args.quiet:
+        for line in notes:
+            print(f"  ok  {line}")
+    for line in failures:
+        print(f"FAIL  {line}")
+    print(f"# compared {len(baseline)} baseline scenario(s): "
+          f"{len(failures)} regression(s) at threshold "
+          f"{args.threshold:.0%}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

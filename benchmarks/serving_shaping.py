@@ -16,6 +16,11 @@ the fluid simulation badly, while the event clock closes the gap — and
 the staggered bandwidth-demand std stays below the P=1 synchronous
 baseline on the event clock (the serving Fig. 5 analogue, live).
 
+``run_cluster`` is the cluster-dispatch headline: the same wave-granular
+load served by a controller + 4 worker-PROCESS cluster (multiprocessing
+transport, shaping router) — the staggered bw std stays below the P=1
+in-process synchronous baseline across a real process boundary.
+
 CSV contract: ``name,us_per_call,derived`` (see common.py).  Every cell's
 full metric set is also accumulated in ``SCENARIOS`` and written to
 ``BENCH_serving.json`` by ``write_bench_json`` (called by ``run.py`` and
@@ -232,6 +237,66 @@ def run_clock_gap(arch: str = "qwen2-7b", smoke: bool = True,
             _note(name, m, extra)
 
 
+def run_cluster(arch: str = "qwen2-7b", smoke: bool = True,
+                n_requests: int = 48, total_slots: int = 16,
+                prompt_len: int = 32, gen: int = 16,
+                transport: str = "mp"):
+    """The cluster-dispatch scenario: the wave-granular Fig. 5 load served
+    by a controller + 4 partition-worker cluster over the REAL
+    multiprocessing transport (one OS process per worker), demand-routed
+    by the shaping router, against the P=1 in-process synchronous
+    baseline.  The shaping cells pin the tentpole claim — staggered
+    steady-state bw std below the P=1 sync baseline — across a process
+    boundary; the round_robin cells are the phase-aligned cluster control
+    (std above baseline, same transport)."""
+    from repro.serving import make_cluster, make_worker_specs
+
+    cfg = get_config(arch, smoke=smoke)
+    bw = phase_balanced_bandwidth(cfg, total_slots=total_slots,
+                                  prompt_len=prompt_len, gen=gen)
+    kw = dict(total_slots=total_slots, n_requests=n_requests,
+              prompt_len=prompt_len, gen=gen)
+    trim1 = _wave_time(cfg, partitions=1, **{k: kw[k] for k in
+                                             ("total_slots", "prompt_len",
+                                              "gen")})
+    trim4 = 1.5 * _wave_time(cfg, partitions=4,
+                             **{k: kw[k] for k in ("total_slots",
+                                                   "prompt_len", "gen")})
+    _, base = _sched_metrics(cfg, partitions=1, policy="none", bandwidth=bw,
+                             clock="event", wave_only=True, **kw)
+    base_std = base.bw_stats(trim=trim1)[1]
+
+    P, slots = 4, max(total_slots // 4, 1)
+    for router in ("round_robin", "shaping"):
+        rng = np.random.default_rng(0)
+        queue = RequestQueue()
+        for _ in range(n_requests):
+            queue.submit(rng.integers(1, cfg.vocab, size=(prompt_len,))
+                         .astype(np.int32), gen)
+        specs = make_worker_specs(arch, P, smoke=smoke, slots=slots,
+                                  max_len=prompt_len + 4 * gen,
+                                  wave_only=True)
+        t0 = time.perf_counter()
+        ctl = make_cluster(specs, queue, transport=transport, router=router,
+                           bandwidth=bw)
+        m = ctl.run()
+        us = (time.perf_counter() - t0) * 1e6
+        assert len(queue.completed) == n_requests, \
+            f"cluster served {len(queue.completed)}/{n_requests}"
+        std_rel = m.bw_stats(trim=trim4)[1] / max(base_std, 1e-15)
+        am, astd = ctl.achieved_bw_stats(trim=trim4)
+        name = f"serving_cluster.{cfg.name}.P{P}.{router}.{transport}"
+        record(name, us,
+               f"tok_s_rel={m.throughput() / base.throughput():.3f};"
+               f"demand_std_rel_trimmed={std_rel:.3f};"
+               f"failovers={ctl.n_failovers}")
+        _note(name, m, {
+            "tok_s_rel": m.throughput() / base.throughput(),
+            "demand_std_rel_trimmed": std_rel,
+            "achieved_bw_mean": am, "achieved_bw_std": astd,
+            "failovers": ctl.n_failovers})
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-7b")
@@ -243,6 +308,11 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--uniform-only", action="store_true",
                     help="skip the ragged-prompt (paged-path) scenario")
+    ap.add_argument("--cluster-transport", default="mp",
+                    choices=["mp", "loopback"],
+                    help="transport for the cluster-dispatch scenario")
+    ap.add_argument("--no-cluster", action="store_true",
+                    help="skip the cluster-dispatch scenario")
     ap.add_argument("--json", default="BENCH_serving.json",
                     help="path for the machine-readable metrics artifact")
     args = ap.parse_args(argv)
@@ -257,6 +327,10 @@ def main(argv=None):
     run_clock_gap(args.arch, smoke=args.smoke, n_requests=n_req,
                   total_slots=args.slots, prompt_len=args.prompt_len,
                   gen=args.gen)
+    if not args.no_cluster:
+        run_cluster(args.arch, smoke=args.smoke, n_requests=n_req,
+                    total_slots=args.slots, prompt_len=args.prompt_len,
+                    gen=args.gen, transport=args.cluster_transport)
     out = write_bench_json(args.json)
     print(f"# wrote {out} ({len(SCENARIOS)} scenarios)")
 

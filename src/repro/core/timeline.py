@@ -129,6 +129,20 @@ class ContentionTimeline:
         heapq.heappush(self._timers, (float(t), self._seq, fn))
         self._seq += 1
 
+    def cancel(self, sp: Span) -> bool:
+        """Take an in-flight span off the clock without completing it (its
+        ``on_complete`` never fires).  Used by the cluster controller when
+        a worker dies mid-op: the work it was doing will never commit, so
+        it must stop contending for bandwidth.  Bandwidth it consumed in
+        already-recorded segments stays recorded (it really was moving
+        bytes until the failure).  Returns True when the span was in
+        flight."""
+        try:
+            self.spans.remove(sp)
+            return True
+        except ValueError:
+            return False
+
     @property
     def idle(self) -> bool:
         return not self.spans and not self._timers

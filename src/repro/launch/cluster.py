@@ -1,0 +1,143 @@
+"""Cluster serving CLI: controller + N partition-worker processes.
+
+The multi-host-shaped deployment of the serving fleet: a controller process
+hosts the ``RequestQueue``, the routing policy, and the shared contention
+clock; each worker process wraps one ``PartitionEngine`` (its own model
+replica — the paper's per-partition weight replication) or a
+``SimulatedEngine`` (``--simulated``: phase timing and pool accounting
+only, no model execution).  Workers pin themselves to their
+``launch.mesh.make_partition_submesh`` group when the host has the devices
+for it and fall back to default placement otherwise, so the same command
+works on a laptop CPU and a pod slice.
+
+  PYTHONPATH=src python -m repro.launch.cluster --arch qwen2-7b --smoke \
+      --workers 4 --router shaping --transport mp --simulated
+
+``--transport loopback`` runs the identical protocol in-process
+(deterministic; the configuration the equivalence tests pin against the
+in-process ``EventScheduler``).
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import hw
+from repro.serving import RequestQueue, decode_cost, prefill_cost
+from repro.serving.cluster import (ROUTERS, TRANSPORTS, make_cluster,
+                                   make_worker_specs)
+from repro.serving.trace_sim import phase_balanced_bandwidth
+
+
+def build_cluster_args(ap: argparse.ArgumentParser) -> None:
+    """The cluster axis flags, shared with ``serve.py --cluster``."""
+    ap.add_argument("--router", default="shaping", choices=list(ROUTERS),
+                    help="request routing + prefill-grant policy: "
+                         "round_robin (phase-aligned baseline), "
+                         "shortest_backlog (join-shortest-backlog), "
+                         "shaping (demand-aware cluster-wide stagger)")
+    ap.add_argument("--transport", default="mp", choices=list(TRANSPORTS),
+                    help="worker transport: 'mp' spawns one OS process per "
+                         "worker; 'loopback' runs the same protocol "
+                         "in-process (deterministic)")
+    ap.add_argument("--heartbeat-timeout", type=float, default=60.0,
+                    help="wall seconds of silence before a worker is "
+                         "declared dead and its requests fail over")
+
+
+def run_cluster(*, arch: str, smoke: bool, workers: int, slots: int,
+                prompt_len: int, gen: int, n_requests: int, router: str,
+                transport: str, simulated: bool, block_size: int = 16,
+                dense: bool = False, heartbeat_timeout: float = 60.0,
+                max_queue=None, deadline=None, seed: int = 0,
+                quiet: bool = False):
+    """Build the request load + worker fleet, run it, print the summary.
+    Returns (controller, metrics)."""
+    cfg = get_config(arch, smoke=smoke)
+    peak_per_worker = hw.TPU_PEAK_FLOPS / workers
+    max_len = prompt_len + 4 * gen + (cfg.n_meta_tokens or 0) + \
+        (cfg.n_img_tokens or 0)
+
+    def estimate(req):
+        pre = prefill_cost(cfg, slots, req.prompt_len, peak_per_worker)
+        dec = decode_cost(cfg, slots, req.prompt_len + gen // 2,
+                          peak_per_worker)
+        return pre.duration + req.max_new_tokens * dec.duration
+
+    queue = RequestQueue(max_depth=max_queue, service_estimate=estimate)
+    rng = np.random.default_rng(seed)
+    for _ in range(n_requests):
+        queue.submit(rng.integers(1, cfg.vocab, size=(prompt_len,))
+                     .astype(np.int32), gen, arrival=0.0, deadline=deadline)
+
+    bandwidth = phase_balanced_bandwidth(
+        cfg, total_slots=workers * slots, prompt_len=prompt_len, gen=gen)
+    specs = make_worker_specs(
+        arch, workers, smoke=smoke, slots=slots, max_len=max_len,
+        engine="sim" if simulated else "real", block_size=block_size,
+        paged=False if dense else None, seed=seed)
+    ctl = make_cluster(specs, queue, transport=transport, router=router,
+                       bandwidth=bandwidth,
+                       heartbeat_timeout=heartbeat_timeout)
+    m = ctl.run()
+    if not quiet:
+        s = m.summary()
+        print(f"cluster: {cfg.name} workers={workers} router={router} "
+              f"transport={transport} slots={workers}x{slots} "
+              f"completed={s['requests_completed']}/{queue.n_submitted} "
+              f"rejected={queue.n_rejected} requeued={queue.n_requeued} "
+              f"failovers={ctl.n_failovers}")
+        print(f"  throughput: {s['tok_per_s_virtual']:.1f} tok/s (virtual) "
+              f"{s['tok_per_s_wall']:.1f} tok/s (wall)")
+        print(f"  ttft p50={s['ttft_p50']*1e3:.3g}ms "
+              f"p95={s['ttft_p95']*1e3:.3g}ms "
+              f"tpot p50={s['tpot_p50']*1e6:.3g}us "
+              f"deadline_misses={s['deadline_misses']}")
+        am, astd = ctl.achieved_bw_stats()
+        print(f"  bw demand: mean={s['bw_demand_mean']/1e9:.1f} GB/s "
+              f"std={s['bw_demand_std']/1e9:.2f} GB/s; achieved "
+              f"mean={am/1e9:.1f} std={astd/1e9:.2f} "
+              f"(pipe {bandwidth/1e9:.0f} GB/s)")
+    return ctl, m
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--workers", type=int, default=4,
+                    help="partition worker count (the paper's P)")
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode slots per worker")
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--dense", action="store_true",
+                    help="dense per-wave KV layout instead of the paged "
+                         "pool (the equivalence oracle)")
+    ap.add_argument("--simulated", action="store_true",
+                    help="SimulatedEngine workers (no model execution)")
+    ap.add_argument("--max-queue", type=int, default=None)
+    ap.add_argument("--deadline", type=float, default=None)
+    build_cluster_args(ap)
+    args = ap.parse_args(argv)
+    if args.workers < 1:
+        ap.error(f"--workers must be >= 1 (got {args.workers})")
+    if args.batch < 1:
+        ap.error(f"--batch must be >= 1 (got {args.batch})")
+    if args.requests < 1:
+        ap.error(f"--requests must be >= 1 (got {args.requests})")
+    run_cluster(arch=args.arch, smoke=args.smoke, workers=args.workers,
+                slots=args.batch, prompt_len=args.prompt_len, gen=args.gen,
+                n_requests=args.requests, router=args.router,
+                transport=args.transport, simulated=args.simulated,
+                block_size=args.block_size, dense=args.dense,
+                heartbeat_timeout=args.heartbeat_timeout,
+                max_queue=args.max_queue, deadline=args.deadline)
+
+
+if __name__ == "__main__":
+    main()

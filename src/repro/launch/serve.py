@@ -12,6 +12,10 @@ identical request load).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
       --partitions 4 --stagger demand --clock event
+
+``--cluster N`` runs the same load as a controller + N partition-worker
+cluster instead (one OS process per worker under ``--transport mp``; see
+``repro.launch.cluster`` for the routing/failover semantics).
 """
 from __future__ import annotations
 
@@ -38,10 +42,12 @@ def main(argv=None):
                     help="decode slots per partition")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--partitions", type=int, default=1)
-    ap.add_argument("--stagger", default="uniform",
+    # in-process fleet axes use None sentinels so an explicit value can be
+    # rejected (not silently dropped) when combined with --cluster
+    ap.add_argument("--partitions", type=int, default=None)
+    ap.add_argument("--stagger", default=None,
                     choices=["none", "uniform", "demand"])
-    ap.add_argument("--clock", default="event", choices=list(CLOCKS),
+    ap.add_argument("--clock", default=None, choices=list(CLOCKS),
                     help="virtual clock: 'event' overlaps partition ops on "
                          "the contention timeline (fluid-model-accurate "
                          "timing; the default), 'lockstep' advances the "
@@ -53,17 +59,26 @@ def main(argv=None):
     ap.add_argument("--dense", action="store_true",
                     help="use the dense per-wave KV layout instead of the "
                          "paged pool (the equivalence oracle)")
+    ap.add_argument("--cluster", type=int, default=None, metavar="N",
+                    help="run as a controller + N partition-worker cluster "
+                         "instead of the in-process fleet (see "
+                         "repro.launch.cluster; --router/--transport pick "
+                         "the routing policy and worker transport)")
+    ap.add_argument("--simulated", action="store_true",
+                    help="with --cluster: SimulatedEngine workers")
     ap.add_argument("--max-queue", type=int, default=None,
                     help="admission control: max queued requests")
     ap.add_argument("--deadline", type=float, default=None,
                     help="per-request completion deadline (virtual s)")
     ap.add_argument("--no-sim", action="store_true",
                     help="skip the serving-trace shaping validation")
+    from repro.launch.cluster import build_cluster_args
+    build_cluster_args(ap)
     args = ap.parse_args(argv)
 
     # validate the fleet shape BEFORE any model/config work so a bad flag
     # fails with a clear message instead of a downstream crash
-    if args.partitions < 1:
+    if args.partitions is not None and args.partitions < 1:
         ap.error(f"--partitions must be >= 1 (got {args.partitions}): the "
                  "fleet needs at least one partition engine")
     if args.batch < 1:
@@ -71,9 +86,38 @@ def main(argv=None):
                  "needs at least one decode slot")
     if args.requests < 1:
         ap.error(f"--requests must be >= 1 (got {args.requests})")
+    if args.cluster is not None and args.cluster < 1:
+        ap.error(f"--cluster must be >= 1 (got {args.cluster})")
+
+    if args.cluster is not None:
+        # controller + N worker-process cluster (repro.launch.cluster).
+        # The in-process-only axes have no cluster meaning: reject them
+        # loudly rather than run a configuration the user did not ask for.
+        for flag, val, hint in [
+                ("--partitions", args.partitions, "--cluster N IS the "
+                 "partition count"),
+                ("--stagger", args.stagger, "use --router (round_robin ~ "
+                 "none, shaping ~ demand)"),
+                ("--clock", args.clock, "the cluster always runs the "
+                 "event-driven contention clock")]:
+            if val is not None:
+                ap.error(f"{flag} applies to the in-process fleet and is "
+                         f"ignored by --cluster; {hint}")
+        from repro.launch.cluster import run_cluster
+        ctl, _ = run_cluster(
+            arch=args.arch, smoke=args.smoke, workers=args.cluster,
+            slots=args.batch, prompt_len=args.prompt_len, gen=args.gen,
+            n_requests=args.requests, router=args.router,
+            transport=args.transport, simulated=args.simulated,
+            block_size=args.block_size, dense=args.dense,
+            heartbeat_timeout=args.heartbeat_timeout,
+            max_queue=args.max_queue, deadline=args.deadline)
+        return [r.tokens for r in ctl.queue.completed]
 
     cfg = get_config(args.arch, smoke=args.smoke)
-    P = args.partitions
+    P = args.partitions if args.partitions is not None else 1
+    args.stagger = args.stagger if args.stagger is not None else "uniform"
+    args.clock = args.clock if args.clock is not None else "event"
     slots = args.batch
     peak_per_part = hw.TPU_PEAK_FLOPS / P  # partitions split one device
     max_len = args.prompt_len + 4 * args.gen + (cfg.n_meta_tokens or 0) + \

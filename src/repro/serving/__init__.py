@@ -11,8 +11,14 @@ the legacy lockstep tick (regression oracle).  ``queue`` handles
 admission/deadlines, ``kv_pool`` owns the paged KV-cache block pool behind
 per-slot continuous batching, ``metrics`` observes per-span demand, and
 ``trace_sim`` validates the std-reduction claim with the Fig. 5 fluid
-simulation on the very same timeline.
+simulation on the very same timeline.  ``cluster`` lifts the fleet out of
+the process: a message-protocol controller routes requests to N partition
+workers (loopback or multiprocessing transports) with heartbeat failover —
+see ``repro.serving.cluster``.
 """
+from repro.serving.cluster import (ClusterController, ClusterError,
+                                   WorkerSpec, make_cluster,
+                                   make_worker_specs)
 from repro.serving.engine import (EngineBase, PartitionEngine, PendingOp,
                                   PhaseCost, SimulatedEngine, decode_cost,
                                   prefill_cost, prefill_cost_ragged)
@@ -25,6 +31,8 @@ from repro.serving.scheduler import (CLOCKS, POLICIES, EventScheduler,
 from repro.serving.trace_sim import serving_tasklists, serving_trace_report
 
 __all__ = [
+    "ClusterController", "ClusterError", "WorkerSpec", "make_cluster",
+    "make_worker_specs",
     "EngineBase", "PartitionEngine", "PendingOp", "PhaseCost",
     "SimulatedEngine", "decode_cost", "prefill_cost", "prefill_cost_ragged",
     "BlockPool", "PoolExhausted", "ServingMetrics", "Request", "RequestQueue",

@@ -1,0 +1,264 @@
+"""Cluster message protocol: the queue/scheduler interactions as wire data.
+
+The in-process fleet couples the scheduler to its engines through direct
+method calls (``assign`` / ``issue_prefill`` / ``issue_decode`` /
+``commit_op``) and through attribute reads (``busy`` / ``wants_prefill`` /
+the backlog head the demand policy prices its spacing from).  This module
+re-expresses every one of those interactions as a serializable dataclass so
+the identical control flow can run across a process (later: host) boundary:
+
+  controller -> worker            worker -> controller
+  --------------------            --------------------
+  Assign   (seat requests)        Hello        (worker came up)
+  IssueOp  (prefill grant /       AssignAck    (requests seated in backlog)
+            decode step)          OpIssued     (op span: FLOPs/bytes/duration)
+  CommitOp (clock-chosen end)     OpCommitted  (retire records + refill span)
+  Ping     (heartbeat)            Pong         (heartbeat ack)
+  Shutdown                        Bye
+                                  WorkerError  (engine raised; fatal)
+
+Every worker reply carries a full ``WorkerStatus`` snapshot — the engine
+predicates plus the analytic spacing ingredients (``pre_dur`` /
+``wave_dur``) the shaping router prices its cluster-wide stagger rule from.
+Worker engine state only changes inside message handlers and the protocol
+is strict request/reply per worker, so the controller's mirror of each
+worker is never stale: the loopback transport therefore reproduces the
+in-process ``EventScheduler`` decision sequence (and metrics) exactly.
+
+``encode`` / ``decode`` round-trip messages through plain dicts of
+primitives (prompts become tuples of ints) — nothing crosses by object
+reference, which both transports exploit: loopback round-trips to prove the
+protocol is complete; the multiprocessing pipe pickles the encoded dicts.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+from typing import Dict, Optional, Tuple, Type
+
+import numpy as np
+
+from repro.serving.engine import PhaseCost
+from repro.serving.queue import Request
+
+OP_KINDS = ("prefill", "decode")
+
+
+# ---------------------------------------------------------------------------
+# payload records
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class WireRequest:
+    """A queued request, flattened for the wire."""
+    rid: int
+    prompt: Tuple[int, ...]
+    max_new_tokens: int
+    arrival: float = 0.0
+    deadline: Optional[float] = None
+
+    @classmethod
+    def from_request(cls, req: Request) -> "WireRequest":
+        return cls(rid=req.rid,
+                   prompt=tuple(int(t) for t in np.asarray(req.prompt)),
+                   max_new_tokens=int(req.max_new_tokens),
+                   arrival=float(req.arrival), deadline=req.deadline)
+
+    def to_request(self) -> Request:
+        return Request(rid=self.rid,
+                       prompt=np.asarray(self.prompt, np.int32),
+                       max_new_tokens=self.max_new_tokens,
+                       arrival=self.arrival, deadline=self.deadline)
+
+
+@dataclass(frozen=True)
+class RetiredRequest:
+    """A request the worker finished: the stamps the controller folds back
+    into its canonical ``Request`` (timestamps are controller virtual
+    seconds — the worker stamped them from ``CommitOp.t_end``)."""
+    rid: int
+    tokens: Tuple[int, ...]
+    t_first_token: Optional[float]
+    t_done: float
+
+
+@dataclass(frozen=True)
+class WireCost:
+    """A ``PhaseCost`` on the wire."""
+    flops: float
+    byts: float
+    duration: float
+
+    @classmethod
+    def from_cost(cls, c: PhaseCost) -> "WireCost":
+        return cls(flops=c.flops, byts=c.byts, duration=c.duration)
+
+    def to_cost(self) -> PhaseCost:
+        return PhaseCost(self.flops, self.byts, self.duration)
+
+
+@dataclass(frozen=True)
+class WorkerStatus:
+    """Engine predicate snapshot, piggybacked on every worker reply.
+
+    ``head_arrival`` is the backlog head's arrival (FIFO-urgency ordering
+    of prefill grants); ``pre_dur`` / ``wave_dur`` are the engine's analytic
+    prefill-duration and wave-time estimates — exactly the quantities the
+    in-process demand policy prices ``max(pre, wave / P)`` spacing from —
+    computed worker-side so both sides of the boundary use the identical
+    cost model.  They are 0.0 when the backlog is empty."""
+    busy: bool
+    wants_prefill: bool
+    backlog_len: int
+    n_active: int
+    head_arrival: float = 0.0
+    pre_dur: float = 0.0
+    wave_dur: float = 0.0
+
+
+# ---------------------------------------------------------------------------
+# controller -> worker
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Assign:
+    """Seat requests in the worker's backlog (the dispatch edge)."""
+    requests: Tuple[WireRequest, ...]
+
+
+@dataclass(frozen=True)
+class IssueOp:
+    """Start one phase op: ``op='prefill'`` is a stagger-policy grant,
+    ``op='decode'`` the never-gated decode step."""
+    op: str
+
+
+@dataclass(frozen=True)
+class CommitOp:
+    """Commit the one outstanding issued op at the clock-chosen instant."""
+    t_end: float
+
+
+@dataclass(frozen=True)
+class Ping:
+    t_wall: float = 0.0
+
+
+@dataclass(frozen=True)
+class Shutdown:
+    pass
+
+
+# ---------------------------------------------------------------------------
+# worker -> controller
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Hello:
+    wid: int
+    slots: int
+    max_len: int
+    status: WorkerStatus
+
+
+@dataclass(frozen=True)
+class AssignAck:
+    status: WorkerStatus
+
+
+@dataclass(frozen=True)
+class OpIssued:
+    """The issued op as a contention-timeline span: run ``duration``
+    full-speed seconds moving ``byts`` bytes (same fields as ``PhaseCost``;
+    the controller puts it in flight on the shared clock)."""
+    op: str
+    cost: WireCost
+    status: WorkerStatus
+
+
+@dataclass(frozen=True)
+class OpCommitted:
+    """Commit results: retired requests plus the sequential refill-prefill
+    span (slots freed by the op re-seated from backlog), if any."""
+    op: str
+    retired: Tuple[RetiredRequest, ...]
+    refill: Optional[WireCost]
+    status: WorkerStatus
+
+
+@dataclass(frozen=True)
+class Pong:
+    t_wall: float
+    status: WorkerStatus
+
+
+@dataclass(frozen=True)
+class Bye:
+    n_prefills: int = 0
+    n_refills: int = 0
+    n_decode_steps: int = 0
+
+
+@dataclass(frozen=True)
+class WorkerError:
+    """The engine raised inside a handler; the run is not recoverable by
+    failover (the same op would raise on any worker)."""
+    error: str
+    traceback: str = ""
+
+
+# ---------------------------------------------------------------------------
+# codec: message <-> dict of primitives
+# ---------------------------------------------------------------------------
+
+_MESSAGES: Tuple[Type, ...] = (
+    Assign, IssueOp, CommitOp, Ping, Shutdown,
+    Hello, AssignAck, OpIssued, OpCommitted, Pong, Bye, WorkerError,
+)
+_KIND_OF: Dict[Type, str] = {cls: cls.__name__ for cls in _MESSAGES}
+_BY_KIND: Dict[str, Type] = {v: k for k, v in _KIND_OF.items()}
+
+# nested dataclass fields, per message type (tuples mean "tuple of")
+_NESTED = {
+    Assign: {"requests": (WireRequest,)},
+    Hello: {"status": WorkerStatus},
+    AssignAck: {"status": WorkerStatus},
+    OpIssued: {"cost": WireCost, "status": WorkerStatus},
+    OpCommitted: {"retired": (RetiredRequest,), "refill": WireCost,
+                  "status": WorkerStatus},
+    Pong: {"status": WorkerStatus},
+}
+
+
+def encode(msg) -> dict:
+    """Flatten a message to a plain dict (pickle/JSON-friendly)."""
+    d = asdict(msg)
+    d["kind"] = _KIND_OF[type(msg)]
+    return d
+
+
+def decode(d: dict):
+    """Rebuild the message object from its ``encode`` dict."""
+    d = dict(d)
+    cls = _BY_KIND[d.pop("kind")]
+    for name, spec in _NESTED.get(cls, {}).items():
+        val = d.get(name)
+        if val is None:
+            continue
+        if isinstance(spec, tuple):
+            d[name] = tuple(_build(spec[0], item) for item in val)
+        else:
+            d[name] = _build(spec, val)
+    return cls(**d)
+
+
+def _build(cls, val):
+    if isinstance(val, cls):  # already decoded (defensive)
+        return val
+    if cls is WireRequest:
+        val = dict(val, prompt=tuple(val["prompt"]))
+    if cls is RetiredRequest:
+        val = dict(val, tokens=tuple(val["tokens"]))
+    return cls(**val)

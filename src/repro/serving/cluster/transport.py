@@ -1,0 +1,167 @@
+"""Cluster transports: deterministic in-process loopback + real pipes.
+
+Both transports move ONLY ``protocol.encode`` dicts — the loopback
+round-trips every message through the codec so tests prove the protocol is
+complete (nothing leaks across by object reference), and the
+multiprocessing transport pickles the same dicts over OS pipes.  The
+controller speaks strict request/reply per worker, so the interface is a
+plain per-worker mailbox:
+
+  send(wid, msg)           raises WorkerGone when the worker is dead
+  recv(wid, timeout=None)  the next reply; raises WorkerGone on pipe EOF
+                           or when no reply lands within the heartbeat
+                           timeout (a hung worker is a dead worker)
+  kill(wid)                test/failover hook: hard-stop one worker
+  close()                  shut every worker down
+
+``LoopbackTransport`` runs each worker's ``WorkerRuntime`` synchronously in
+the calling process: fully deterministic, used by the equivalence tests and
+the ``ContentionTimeline`` fluid validation.  ``PipeTransport`` spawns one
+OS process per ``WorkerSpec`` (spawn start method — fork is unsafe under an
+initialized jax runtime) and is the real multi-process deployment shape.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+from typing import Dict, List, Optional, Sequence
+
+from repro.serving.cluster import protocol as P
+from repro.serving.cluster.worker import WorkerRuntime, WorkerSpec, \
+    build_engine, worker_main
+
+
+class WorkerGone(RuntimeError):
+    """The worker cannot be reached: crashed, killed, or heartbeat-silent."""
+
+    def __init__(self, wid: int, why: str = "gone"):
+        super().__init__(f"worker {wid} {why}")
+        self.wid = wid
+
+
+class LoopbackTransport:
+    """Deterministic in-process transport over the real codec.
+
+    Each ``send`` runs the target worker's handler immediately; replies
+    queue in a per-worker mailbox for ``recv``.  ``kill`` drops the worker
+    mid-conversation — subsequent sends/recvs raise ``WorkerGone`` exactly
+    as a crashed process would, which makes failover deterministic to test
+    (arm a ``timeline.call_at`` timer that kills at a virtual instant).
+    """
+
+    def __init__(self, specs: Sequence[WorkerSpec]):
+        self.specs = list(specs)
+        self.runtimes: Dict[int, WorkerRuntime] = {}
+        self._inbox: Dict[int, List[dict]] = {}
+        self._dead: set = set()
+        for spec in self.specs:
+            rt = WorkerRuntime(build_engine(spec))
+            self.runtimes[spec.wid] = rt
+            self._inbox[spec.wid] = [P.encode(rt.hello())]
+
+    def workers(self) -> List[int]:
+        return [s.wid for s in self.specs]
+
+    def send(self, wid: int, msg) -> None:
+        if wid in self._dead:
+            raise WorkerGone(wid, "killed")
+        reply = self.runtimes[wid].handle(P.decode(P.encode(msg)))
+        self._inbox[wid].append(P.encode(reply))
+
+    def recv(self, wid: int, timeout: Optional[float] = None):
+        if wid in self._dead:
+            raise WorkerGone(wid, "killed")
+        if not self._inbox[wid]:
+            raise RuntimeError(f"worker {wid}: recv with no pending reply "
+                               "(protocol is strict request/reply)")
+        return P.decode(self._inbox[wid].pop(0))
+
+    def kill(self, wid: int) -> None:
+        self._dead.add(wid)
+        self._inbox[wid].clear()
+
+    def close(self) -> None:
+        for wid, rt in self.runtimes.items():
+            if wid not in self._dead:
+                rt.handle(P.Shutdown())
+        self._dead.update(self.runtimes)
+
+
+class PipeTransport:
+    """One OS process per worker, one duplex pipe each.
+
+    ``recv`` bounds its wait by ``heartbeat_timeout`` wall seconds: a
+    worker that neither replies nor closes its pipe within the window is
+    declared gone (the controller then fails its requests over).  Uses the
+    ``spawn`` start method so workers import their own jax runtime instead
+    of forking the parent's.
+    """
+
+    def __init__(self, specs: Sequence[WorkerSpec], *,
+                 heartbeat_timeout: float = 60.0, start_method: str = "spawn"):
+        self.specs = list(specs)
+        self.heartbeat_timeout = float(heartbeat_timeout)
+        ctx = mp.get_context(start_method)
+        self._conns: Dict[int, object] = {}
+        self._procs: Dict[int, object] = {}
+        for spec in self.specs:
+            parent, child = ctx.Pipe(duplex=True)
+            proc = ctx.Process(target=worker_main, args=(child, spec),
+                               daemon=True, name=f"cluster-worker-{spec.wid}")
+            proc.start()
+            child.close()  # child end lives in the worker process now
+            self._conns[spec.wid] = parent
+            self._procs[spec.wid] = proc
+
+    def workers(self) -> List[int]:
+        return [s.wid for s in self.specs]
+
+    def send(self, wid: int, msg) -> None:
+        try:
+            self._conns[wid].send(P.encode(msg))
+        except (BrokenPipeError, OSError) as e:
+            raise WorkerGone(wid, f"pipe closed ({e})") from e
+
+    def recv(self, wid: int, timeout: Optional[float] = None):
+        conn = self._conns[wid]
+        wait = self.heartbeat_timeout if timeout is None else float(timeout)
+        try:
+            if not conn.poll(wait):
+                raise WorkerGone(wid, f"heartbeat timeout ({wait:.1f}s)")
+            return P.decode(conn.recv())
+        except (EOFError, OSError) as e:
+            raise WorkerGone(wid, f"pipe closed ({e})") from e
+
+    def kill(self, wid: int) -> None:
+        proc = self._procs[wid]
+        if proc.is_alive():
+            proc.kill()
+        self._conns[wid].close()
+
+    def close(self) -> None:
+        for wid, conn in self._conns.items():
+            try:
+                conn.send(P.encode(P.Shutdown()))
+            except (BrokenPipeError, OSError):
+                pass
+        for wid, proc in self._procs.items():
+            proc.join(timeout=5.0)
+            if proc.is_alive():
+                proc.kill()
+                proc.join(timeout=5.0)
+            try:
+                self._conns[wid].close()
+            except OSError:
+                pass
+
+
+TRANSPORTS = ("loopback", "mp")
+
+
+def make_transport(kind: str, specs: Sequence[WorkerSpec], **kw):
+    """Build a transport by name (the ``--transport`` CLI axis)."""
+    if kind == "loopback":
+        kw.pop("heartbeat_timeout", None)
+        return LoopbackTransport(specs, **kw)
+    if kind == "mp":
+        return PipeTransport(specs, **kw)
+    raise ValueError(f"transport must be one of {TRANSPORTS}, got {kind!r}")

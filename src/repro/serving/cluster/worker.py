@@ -1,0 +1,188 @@
+"""Partition worker: one engine behind the cluster message protocol.
+
+``WorkerRuntime`` is the protocol adapter — it owns exactly one
+``EngineBase`` and maps each controller message onto the engine's
+issue/commit surface, replying with a fresh ``WorkerStatus`` snapshot.
+The SAME runtime class serves both transports: the loopback transport
+calls ``handle`` in-process, ``worker_main`` runs it as a subprocess
+recv/handle/send loop over a multiprocessing pipe.
+
+``WorkerSpec`` is the picklable recipe a worker process builds its engine
+from (the controller never ships live objects across the boundary).  Real
+engines pin themselves to a ``launch.mesh.make_partition_submesh`` group
+when the host has enough devices — the paper's per-partition synchronous
+group — and fall back to the default (single-)device placement otherwise,
+so the cluster runs unchanged on a laptop CPU and on a pod slice.
+"""
+from __future__ import annotations
+
+import traceback
+from contextlib import nullcontext
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.serving.cluster import protocol as P
+from repro.serving.engine import EngineBase, PendingOp
+
+
+class WorkerRuntime:
+    """Protocol adapter around one engine (any ``EngineBase``)."""
+
+    def __init__(self, engine: EngineBase):
+        self.engine = engine
+        self._pending: Optional[PendingOp] = None
+
+    # -- status snapshot -----------------------------------------------------
+    def status(self) -> P.WorkerStatus:
+        e = self.engine
+        pre_dur = wave_dur = 0.0
+        head_arrival = 0.0
+        if e.backlog:
+            head = e.backlog[0]
+            head_arrival = float(head.arrival)
+            if e.wants_prefill:
+                # the demand-spacing ingredients, priced engine-side with
+                # the same analytic estimators the in-process policy uses
+                pre = e.prefill_cost_est()
+                pre_dur = pre.duration
+                wave_dur = pre.duration + head.max_new_tokens * \
+                    e.decode_cost_est().duration
+        return P.WorkerStatus(
+            busy=e.busy, wants_prefill=e.wants_prefill,
+            backlog_len=len(e.backlog),
+            n_active=sum(1 for r in e.active if r is not None),
+            head_arrival=head_arrival, pre_dur=pre_dur, wave_dur=wave_dur)
+
+    def hello(self) -> P.Hello:
+        return P.Hello(wid=self.engine.pid, slots=self.engine.slots,
+                       max_len=self.engine.max_len, status=self.status())
+
+    # -- message dispatch ----------------------------------------------------
+    def handle(self, msg):
+        try:
+            return self._handle(msg)
+        except Exception as e:  # noqa: BLE001 — shipped to the controller
+            return P.WorkerError(error=f"{type(e).__name__}: {e}",
+                                 traceback=traceback.format_exc())
+
+    def _handle(self, msg):
+        if isinstance(msg, P.Assign):
+            self.engine.assign([wr.to_request() for wr in msg.requests])
+            return P.AssignAck(status=self.status())
+        if isinstance(msg, P.IssueOp):
+            assert self._pending is None, "issue before previous commit"
+            if msg.op == "prefill":
+                self._pending = self.engine.issue_prefill()
+            elif msg.op == "decode":
+                self._pending = self.engine.issue_decode()
+            else:
+                raise ValueError(f"unknown op {msg.op!r}")
+            return P.OpIssued(op=msg.op,
+                              cost=P.WireCost.from_cost(self._pending.cost),
+                              status=self.status())
+        if isinstance(msg, P.CommitOp):
+            assert self._pending is not None, "commit with no issued op"
+            pend, self._pending = self._pending, None
+            extra = self.engine.commit_op(pend, msg.t_end)
+            retired = tuple(
+                P.RetiredRequest(rid=r.rid, tokens=tuple(r.tokens),
+                                 t_first_token=r.t_first_token,
+                                 t_done=r.t_done)
+                for r in self._drain_completed())
+            refill = P.WireCost.from_cost(extra) if extra is not None else None
+            return P.OpCommitted(op=pend.kind, retired=retired,
+                                 refill=refill, status=self.status())
+        if isinstance(msg, P.Ping):
+            return P.Pong(t_wall=msg.t_wall, status=self.status())
+        if isinstance(msg, P.Shutdown):
+            return P.Bye(n_prefills=self.engine.n_prefills,
+                         n_refills=self.engine.n_refills,
+                         n_decode_steps=self.engine.n_decode_steps)
+        raise ValueError(f"unknown message {type(msg).__name__}")
+
+    def _drain_completed(self):
+        out, self.engine.completed = self.engine.completed, []
+        return out
+
+
+# ---------------------------------------------------------------------------
+# engine construction from a picklable spec (subprocess + loopback share it)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class WorkerSpec:
+    """Everything a worker process needs to build its engine."""
+    wid: int
+    arch: str
+    smoke: bool
+    slots: int
+    max_len: int
+    peak_flops: float
+    engine: str = "sim"          # "sim" | "real"
+    wave_only: bool = False
+    block_size: int = 16
+    paged: Optional[bool] = None
+    partitions: int = 1          # submesh group count (real engines)
+    seed: int = 0
+
+
+def _partition_mesh(spec: WorkerSpec):
+    """Pin the worker to its ``make_partition_submesh`` group when the host
+    has the devices for it; otherwise run on default placement (CPU dev
+    boxes).  Returns a context manager either way."""
+    import jax
+
+    from repro.launch import mesh as M
+
+    if spec.partitions > 1 and M.DATA_AXIS % spec.partitions == 0:
+        need = (M.DATA_AXIS // spec.partitions) * M.MODEL_AXIS
+        if len(jax.devices()) >= need:
+            return M.mesh_context(M.make_partition_submesh(spec.partitions))
+    return nullcontext()
+
+
+def build_engine(spec: WorkerSpec) -> EngineBase:
+    """Build the engine a spec describes (used by subprocess workers and by
+    the loopback transport, so both paths serve identical engines)."""
+    from repro.configs import get_config
+    from repro.serving.engine import SimulatedEngine
+
+    cfg = get_config(spec.arch, smoke=spec.smoke)
+    kw = dict(slots=spec.slots, max_len=spec.max_len, pid=spec.wid,
+              peak_flops=spec.peak_flops, wave_only=spec.wave_only,
+              block_size=spec.block_size)
+    if spec.engine == "sim":
+        return SimulatedEngine(cfg, **kw)
+    if spec.engine != "real":
+        raise ValueError(f"unknown engine kind {spec.engine!r}")
+    import jax
+
+    from repro.models import api as mapi
+    from repro.serving.engine import PartitionEngine
+
+    with _partition_mesh(spec):
+        api = mapi.build(cfg)
+        params = api.init(jax.random.PRNGKey(spec.seed))
+        return PartitionEngine(cfg, api, params, paged=spec.paged,
+                               seed=spec.seed, **kw)
+
+
+def worker_main(conn, spec: WorkerSpec) -> None:
+    """Subprocess entry: build the engine, say Hello, then serve the
+    request/reply loop until Shutdown (or the pipe closes)."""
+    mesh_ctx = _partition_mesh(spec) if spec.engine == "real" else \
+        nullcontext()
+    with mesh_ctx:
+        rt = WorkerRuntime(build_engine(spec))
+        conn.send(P.encode(rt.hello()))
+        while True:
+            try:
+                msg = P.decode(conn.recv())
+            except (EOFError, OSError):
+                break  # controller went away
+            reply = rt.handle(msg)
+            conn.send(P.encode(reply))
+            if isinstance(reply, P.Bye):
+                break
+    conn.close()

@@ -15,11 +15,42 @@ All times are virtual seconds on the scheduler clock.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.timeline import bin_bw_samples
 from repro.serving.queue import Request
+
+
+def achieved_bw_stats(bw_samples, t_end: float, *,
+                      window: Optional[float] = None, trim: float = 0.0,
+                      ) -> Tuple[float, float]:
+    """(mean, std) of the ALLOCATED aggregate bandwidth over fixed windows
+    — the exact observable of ``core.shaping_sim`` (Fig. 5), measured on a
+    live contention clock (``EventScheduler`` and the cluster controller
+    both delegate here).  ``trim`` drops windows within that many seconds
+    of both ends (warmup/cooldown exclusion).
+
+    Degenerate traces are hardened to empty-trace stats (0.0, 0.0) instead
+    of NaN or an exception: an empty sample list, a zero-length clock, or a
+    trim window that meets/exceeds the trace span all mean "no steady
+    state was observed"."""
+    if not bw_samples or t_end <= 0.0:
+        return 0.0, 0.0
+    if trim > 0 and 2 * trim >= t_end:
+        return 0.0, 0.0
+    if window is None:
+        window = max(t_end / 400.0, 1e-12)
+    edges, bw = bin_bw_samples(bw_samples, t_end, window)
+    centers = edges[:-1] + window / 2
+    if trim > 0:
+        # unconditional: if the trim excludes every window the answer is
+        # the empty-trace stats, never a silently untrimmed average
+        bw = bw[(centers > trim) & (centers < t_end - trim)]
+    if len(bw) == 0:
+        return 0.0, 0.0
+    return float(bw.mean()), float(bw.std())
 
 
 @dataclass
@@ -57,6 +88,13 @@ class ServingMetrics:
         if not self.spans:
             return np.zeros(1), np.ones(1)
         arr = np.asarray(self.spans)
+        span = float((arr[:, 0] + np.maximum(arr[:, 1], 1e-15)).max()
+                     - arr[:, 0].min())
+        if trim > 0 and 2 * trim >= span:
+            # the trim window swallows the whole trace: no steady state was
+            # observed — report empty-trace stats, never NaN or a silently
+            # untrimmed answer
+            return np.zeros(1), np.ones(1)
         t0 = arr[:, 0]
         t1 = arr[:, 0] + np.maximum(arr[:, 1], 1e-15)
         edges = np.unique(np.concatenate([t0, t1]))
@@ -70,10 +108,13 @@ class ServingMetrics:
         widths = np.diff(edges)
         keep = widths > 1e-18
         if trim > 0:
+            # unconditional, like ``achieved_bw_stats``: a trim that
+            # excludes every segment yields empty-trace stats, never a
+            # silently untrimmed answer
             centers = (edges[:-1] + edges[1:]) / 2
-            inner = (centers > edges[0] + trim) & (centers < edges[-1] - trim)
-            if (keep & inner).sum() >= 4:
-                keep &= inner
+            keep &= (centers > edges[0] + trim) & (centers < edges[-1] - trim)
+            if not keep.any():
+                return np.zeros(1), np.ones(1)
         if not keep.any():
             return vals, np.maximum(widths, 1e-15)
         return vals[keep], widths[keep]

@@ -57,6 +57,7 @@ class RequestQueue:
         self._next_rid = 0
         self.n_submitted = 0
         self.n_rejected = 0
+        self.n_requeued = 0
         self.completed: List[Request] = []
 
     def __len__(self) -> int:
@@ -86,6 +87,21 @@ class RequestQueue:
         refill tests pin down)."""
         out, self._fifo = self._fifo[:n], self._fifo[n:]
         return out
+
+    def requeue(self, requests: List[Request]) -> None:
+        """Re-admit already-admitted requests (cluster failover: a dead
+        worker's unfinished work must not lose its place).  The queue is
+        re-sorted by rid — the admission order — so requeued requests slot
+        back in FRONT of everything admitted after them, and sequential
+        failovers cannot let a later worker's newer requests jump an
+        earlier worker's older, already-requeued ones.  Bypasses admission
+        control — the requests were admitted once and rejecting them now
+        would lose them; the depth bound may transiently overshoot.
+        Arrival and deadline are the caller's to preserve (TTFT stays
+        billed from the original arrival)."""
+        self._fifo[:0] = list(requests)
+        self._fifo.sort(key=lambda r: r.rid)
+        self.n_requeued += len(requests)
 
     def mark_done(self, req: Request) -> None:
         self.completed.append(req)

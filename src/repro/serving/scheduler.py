@@ -58,10 +58,9 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import hw
-from repro.core.timeline import (ContentionTimeline, Span, bin_bw_samples,
-                                 maxmin_fair)
+from repro.core.timeline import ContentionTimeline, Span, maxmin_fair
 from repro.serving.engine import PendingOp
-from repro.serving.metrics import ServingMetrics
+from repro.serving.metrics import ServingMetrics, achieved_bw_stats
 from repro.serving.queue import RequestQueue
 
 POLICIES = ("none", "uniform", "demand")
@@ -373,17 +372,11 @@ class EventScheduler:
         """(mean, std) of the ALLOCATED aggregate bandwidth over fixed
         windows — the exact observable of ``core.shaping_sim`` (Fig. 5),
         measured on the live clock.  ``trim`` drops windows within that
-        many seconds of both ends (warmup/cooldown exclusion)."""
-        t_end = self.timeline.now
-        if window is None:
-            window = max(t_end / 400.0, 1e-12)
-        edges, bw = bin_bw_samples(self.timeline.bw_samples, t_end, window)
-        centers = edges[:-1] + window / 2
-        if trim > 0:
-            keep = (centers > trim) & (centers < t_end - trim)
-            if keep.sum() >= 4:
-                bw = bw[keep]
-        return float(bw.mean()), float(bw.std())
+        many seconds of both ends (warmup/cooldown exclusion); degenerate
+        traces (empty, zero-length, or fully swallowed by the trim) report
+        empty-trace stats (0, 0) — see ``metrics.achieved_bw_stats``."""
+        return achieved_bw_stats(self.timeline.bw_samples, self.timeline.now,
+                                 window=window, trim=trim)
 
 
 def make_scheduler(engines: List, queue: RequestQueue, *,

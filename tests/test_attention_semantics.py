@@ -67,6 +67,7 @@ def test_q_offset_chunked_prefill_equivalence():
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_whisper_decode_matches_teacher_forcing():
     cfg = get_config("whisper-base", smoke=True)
     m = mapi.build(cfg)

@@ -257,3 +257,67 @@ def test_metrics_overlapping_spans_aggregate():
     m.observe_span(0.0, 2.0, 10.0)   # [0,2) at 10
     m.observe_span(1.0, 2.0, 30.0)   # [1,3) at 30 -> [1,2) sums to 40
     assert m.bw_demand_mean == pytest.approx((10 + 40 + 30) / 3)
+
+
+def test_bw_stats_trim_swallowing_trace_returns_empty_stats():
+    """Hardening: a trim window that meets or exceeds the trace span means
+    no steady state was observed — (0, 0), never NaN, never a silently
+    untrimmed answer."""
+    from repro.serving.metrics import ServingMetrics
+
+    m = ServingMetrics()
+    m.observe_span(0.0, 1.0, 10.0)
+    m.observe_span(1.0, 1.0, 30.0)   # trace span: [0, 2]
+    assert m.bw_stats(trim=0.0) == pytest.approx((20.0, 10.0))
+    for trim in (1.0, 1.5, 2.0, 100.0):   # 2*trim >= span
+        mean, std = m.bw_stats(trim=trim)
+        assert (mean, std) == (0.0, 0.0), trim
+        assert not (np.isnan(mean) or np.isnan(std))
+    # a sane trim still trims
+    assert m.bw_stats(trim=0.25) == m.bw_stats(trim=0.0)  # centres survive
+
+
+def test_bw_stats_empty_trace_is_zero():
+    from repro.serving.metrics import ServingMetrics
+
+    m = ServingMetrics()
+    assert m.bw_stats() == (0.0, 0.0)
+    assert m.bw_stats(trim=5.0) == (0.0, 0.0)
+
+
+def test_achieved_bw_stats_degenerate_traces():
+    """Same hardening for the allocated-bandwidth observable (shared by
+    EventScheduler and the cluster controller)."""
+    from repro.serving.metrics import achieved_bw_stats
+
+    # empty trace / zero-length clock
+    assert achieved_bw_stats([], 0.0) == (0.0, 0.0)
+    assert achieved_bw_stats([], 1.0, trim=10.0) == (0.0, 0.0)
+    assert achieved_bw_stats([(0.0, 1.0, 5.0)], 0.0) == (0.0, 0.0)
+    # trim >= trace span
+    samples = [(0.0, 1.0, 5.0), (1.0, 2.0, 15.0)]
+    for trim in (1.0, 2.0, 50.0):
+        mean, std = achieved_bw_stats(samples, 2.0, trim=trim)
+        assert (mean, std) == (0.0, 0.0), trim
+    # untrimmed and sanely-trimmed stats stay finite and positive
+    mean, std = achieved_bw_stats(samples, 2.0, window=0.5)
+    assert mean == pytest.approx(10.0) and std == pytest.approx(5.0)
+    mean_t, _ = achieved_bw_stats(samples, 2.0, window=0.5, trim=0.5)
+    assert np.isfinite(mean_t) and mean_t > 0
+    # regression: a trim excluding EVERY window centre (but < half the
+    # span) reports empty-trace stats, never a silently untrimmed average
+    assert achieved_bw_stats(samples, 2.0, window=0.5,
+                             trim=0.8) == (0.0, 0.0)
+
+
+def test_event_scheduler_achieved_bw_stats_overtrim_is_empty():
+    cfg = _cfg()
+    q = RequestQueue()
+    _load(q, 4)
+    sched = EventScheduler(_fleet(cfg, 1), q, policy="none",
+                           bandwidth=hw.TPU_HBM_BW)
+    sched.run()
+    t_end = sched.timeline.now
+    assert sched.achieved_bw_stats()[0] > 0
+    assert sched.achieved_bw_stats(trim=t_end) == (0.0, 0.0)
+    assert sched.achieved_bw_stats(trim=t_end / 2) == (0.0, 0.0)

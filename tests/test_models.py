@@ -129,6 +129,7 @@ def test_cnn_trace_totals_match_literature(name, gflops, mb):
     assert abs(w - mb) / mb < 0.12, w
 
 
+@pytest.mark.slow
 def test_cnn_forward_all():
     for name in ("vgg16", "googlenet", "resnet50"):
         params = cnn.init_cnn(jax.random.PRNGKey(0), name, img=32)

@@ -51,6 +51,62 @@ def test_queue_deadline_admission():
     assert q.n_rejected == 1
 
 
+def test_queue_depth_rejection_recovers_after_pop():
+    """A bounded queue rejects at the bound, then admits again once depth
+    frees up — and the rejected request got no rid (rids stay dense over
+    ADMITTED requests only)."""
+    q = RequestQueue(max_depth=2)
+    a = q.submit(np.zeros(4, np.int32), 4)
+    b = q.submit(np.zeros(4, np.int32), 4)
+    assert q.submit(np.zeros(4, np.int32), 4) is None  # at the bound
+    q.pop(1)
+    c = q.submit(np.zeros(4, np.int32), 4)
+    assert c is not None
+    assert [a.rid, b.rid, c.rid] == [0, 1, 2]
+    assert q.n_submitted == 3 and q.n_rejected == 1
+
+
+def test_queue_deadline_accounts_for_arrival():
+    """Feasibility is measured from the request's own arrival: the same
+    absolute deadline is feasible at arrival 0 and infeasible for a
+    request arriving 9.5s in (1s of service, deadline t=10)."""
+    q = RequestQueue(service_estimate=lambda r: 1.0)
+    early = q.submit(np.zeros(4, np.int32), 4, arrival=0.0, deadline=10.0)
+    late = q.submit(np.zeros(4, np.int32), 4, arrival=9.5, deadline=10.0)
+    assert early is not None and late is None
+
+
+def test_queue_requeue_readmits_at_front():
+    """The cluster failure handler's path: requeued requests go back to
+    the FRONT (they must not lose their place), keep their rids and
+    arrival/deadline accounting, bypass admission control even at the
+    depth bound, and are served before newer work."""
+    q = RequestQueue(max_depth=3)
+    reqs = _load(q, 3, deadline=50.0)
+    popped = q.pop(2)              # a worker took two requests...
+    q.requeue(popped)              # ...and died
+    assert q.n_requeued == 2
+    assert len(q) == 3             # back at the bound
+    # the depth bound still rejects NEW submissions while requeued work
+    # holds the queue — only requeue itself bypasses admission
+    assert q.submit(np.zeros(4, np.int32), 4) is None
+    assert [r.rid for r in q.pop(3)] == [0, 1, 2]  # front, FIFO restored
+    assert all(r.deadline == 50.0 and r.arrival == 0.0 for r in reqs[:2])
+
+
+def test_sequential_requeues_restore_admission_order():
+    """Two workers dying in the wrong order must not let the later (newer)
+    requests jump the earlier (older) ones: requeue restores global
+    admission order."""
+    q = RequestQueue()
+    _load(q, 6)
+    worker_a = q.pop(2)            # rids 0, 1 (oldest)
+    worker_b = q.pop(2)            # rids 2, 3
+    q.requeue(worker_b)            # the NEWER worker dies first...
+    q.requeue(worker_a)            # ...then the older one
+    assert [r.rid for r in q.pop(6)] == [0, 1, 2, 3, 4, 5]
+
+
 # ---------------------------------------------------------------------------
 # phase-cost premise: prefill compute-bound, decode bandwidth-bound
 # ---------------------------------------------------------------------------
