@@ -27,6 +27,7 @@ def main() -> None:
         (serving_shaping.run, ()),
         (serving_shaping.run_ragged, ()),    # paged per-slot batching path
         (serving_shaping.run_clock_gap, ()),  # event-vs-lockstep clock axis
+        (serving_shaping.run_cost_model_gap, ()),  # measured-vs-analytic
         (serving_shaping.run_cluster, ()),   # multiprocess cluster dispatch
         (roofline_report.run, ()),
     ]:

@@ -23,8 +23,14 @@ The event loop itself lives in ``repro.core.timeline``
 (``ContentionTimeline``): ``simulate`` and ``simulate_tasks`` are thin
 wrappers that chain per-partition task spans on that shared clock — the
 same clock the live serving scheduler (``serving.scheduler
-.EventScheduler``) runs on, so simulated and served timelines are the one
-contention model.
+.EventScheduler``) and the cluster controller run on, so simulated and
+served timelines are the one contention model and their bandwidth
+statistics are directly comparable (the equivalence is pinned by
+``tests/test_timeline.py``, which holds this module's pre-refactor traces
+bit-comparable).  This module keeps what is paper-specific: building the
+task lists from layer traces (``tasks_from_traces`` with the calibrated
+``KIND_EFF`` / ``ACT_AMP`` constants), the stagger offsets, and the
+Fig. 4/5/6 reporting (``SimResult`` / ``partition_sweep``).
 """
 from __future__ import annotations
 
@@ -42,7 +48,8 @@ from repro.core.timeline import (ContentionTimeline, bin_bw_samples,
 # ref [16]).  Calibrated in one pass against the paper's Fig. 5 numbers
 # (perf +3.9/+11.1/+8.0%, std -20/-37.6/-36.2%, avg +18.7/+22.7/+15.2% for
 # VGG-16/GoogleNet/ResNet-50) -> our sweep lands at +2.3/+11.7/+11.3%,
-# std -28/-60/-45%, avg +19/+15/+19% (see EXPERIMENTS.md).  Table 1's
+# std -28/-60/-45%, avg +19/+15/+19% (benchmarks/fig5_partition_sweep.py
+# reproduces the comparison).  Table 1's
 # 2.9-3.7 TFLOP/s is the *best* conv layers on the 6 TFLOP/s KNL; the
 # fleet-average efficiency across all layers is lower, hence conv 0.35.
 KIND_EFF = {"conv": 0.35, "fc": 0.30, "bn": 0.22, "relu": 0.22,
@@ -120,9 +127,19 @@ def simulate(traces, *, partitions: int, total_batch: int,
              kind_eff=KIND_EFF, act_amp=ACT_AMP, seed: int = 0) -> SimResult:
     """Event-driven simulation of P partitions over ``n_passes`` batch passes.
 
-    stagger: "none" (all aligned — the degenerate case), "uniform"
-    (p * pass_time / P), "random", or "custom" with explicit ``offsets``
-    (fractions of one pass) from the schedule optimizer.
+    Each partition gets ``total_batch / P`` images and ``total_cores / P``
+    cores, loops the layer task list on the shared contention clock, and
+    contends for ``bandwidth``.  stagger: "none" (all aligned — the
+    degenerate synchronous case), "uniform" (p * pass_time / P — the
+    paper's static offsets), "random", or "custom" with explicit
+    ``offsets`` (fractions of one pass) from the schedule optimizer
+    (``core.schedule``).
+
+    Returns a ``SimResult``: aggregate bandwidth per window (warmup and
+    cooldown passes trimmed), images completed, and the steady-state
+    throughput measured between each partition's first and last pass
+    completion (startup transient excluded) — mean/std of ``result.bw``
+    and ``result.throughput`` are the paper's Fig. 5 metrics.
     """
     P = partitions
     b = total_batch // P

@@ -10,20 +10,34 @@ the next event.  Spans therefore *stretch* under contention exactly as in
 the paper's fluid model (§4): the queueing effect of Fig. 3(b) falls out
 of the allocation, not out of any per-consumer modelling.
 
-This module is the single timing substrate for both evaluation paths:
+The span lifecycle: ``start()`` puts a span in flight *now*; between
+events it progresses at ``min(1, alloc / demand)`` of full speed; when its
+remaining full-speed seconds hit zero the clock advances to that instant,
+stamps ``t_end``, and fires ``on_complete(span, now)`` — which typically
+issues the next span, which the next re-allocation picks up.  Time only
+moves inside ``step()``; callbacks never see a half-advanced clock.
+
+This module is the single timing substrate for every evaluation path
+(before PR 3 each path had its own loop; they are one clock now, which is
+what makes simulated and live numbers directly comparable):
 
   * ``core.shaping_sim.simulate`` / ``simulate_tasks`` — the paper's
     Fig. 4/5/6 simulator — drive per-partition task chains over one
-    timeline (each task-completion callback starts the next task);
-  * ``serving.scheduler.EventScheduler`` — the live serving clock — issues
-    each partition's prefill/decode op as an independent span, so a
-    partition finishes its decode step and immediately starts the next
-    while a neighbour is still mid-prefill.
+    timeline via ``run_chain`` (each task-completion callback starts the
+    next task);
+  * ``serving.scheduler.EventScheduler`` — the live in-process serving
+    clock — issues each partition's prefill/decode op as an independent
+    span, so a partition finishes its decode step and immediately starts
+    the next while a neighbour is still mid-prefill;
+  * ``serving.cluster.ClusterController`` — the multi-process cluster —
+    puts each worker's ``OpIssued`` reply in flight as a span on ITS
+    timeline, so virtual time is transport-invariant (a multiprocessing
+    run reproduces the loopback run bit-for-bit).
 
 The recorded observable is ``bw_samples``: piecewise-constant
 (t_start, t_end, aggregate allocated bytes/s) segments between events,
 resampled into fixed windows by ``bin_bw_samples`` for the mean/std
-shaping metrics.
+shaping metrics (the paper's Fig. 1/5 curves).
 """
 from __future__ import annotations
 
@@ -41,7 +55,25 @@ _EPS_SPEED = 1e-12  # progress rates below this stall (infinite finish time)
 
 
 def maxmin_fair(demands: np.ndarray, cap: float) -> np.ndarray:
-    """Max-min fair allocation of ``cap`` among flows wanting ``demands``."""
+    """Max-min fair allocation of ``cap`` among flows wanting ``demands``.
+
+    Progressive filling: every unsatisfied flow receives an equal share of
+    the remaining capacity; flows whose demand is met leave the active set
+    and their leftover is redistributed, until either every demand is
+    satisfied or the pipe is exhausted.  The result has the two defining
+    properties (property-tested in ``tests/test_timeline.py``):
+
+      * no flow receives more than it asked for, and when total demand
+        exceeds ``cap`` the full capacity is handed out;
+      * the *binding* flows (those not fully satisfied) all receive the
+        same allocation, and it is >= every satisfied flow's demand — no
+        starved flow while a greedier one gets more.
+
+    This is the paper's §4 contention model: memory-bound phases are
+    exactly the flows that end up binding, and the queueing of Fig. 3(b)
+    falls out of the allocation with no per-consumer modelling.  Flows
+    with zero demand are left at zero (pure-compute spans run at full
+    speed regardless of the pipe)."""
     alloc = np.zeros_like(demands)
     active = demands > 0
     remaining = cap
@@ -60,7 +92,12 @@ def maxmin_fair(demands: np.ndarray, cap: float) -> np.ndarray:
 
 
 def bin_bw_samples(bw_samples, t_end: float, window: float):
-    """Resample (t_start, t_end, bytes/s) spans into fixed windows."""
+    """Resample (t_start, t_end, bytes/s) segments into fixed windows.
+
+    Each segment contributes to a window proportionally to the time it
+    overlaps it (a segment fully inside a window adds ``v * seg/window``),
+    so the result is the time-weighted average bandwidth per window —
+    the Fig. 1/5 observable.  Returns ``(edges, bw_per_window)``."""
     edges = np.arange(0.0, t_end + window, window)
     bw_win = np.zeros(max(len(edges) - 1, 1))
     for (a, bnd, v) in bw_samples:
@@ -78,7 +115,16 @@ def bin_bw_samples(bw_samples, t_end: float, window: float):
 
 @dataclass
 class Span:
-    """One in-flight unit of work on the shared pipe."""
+    """One in-flight unit of work on the shared pipe.
+
+    ``duration`` is the op's length at FULL compute speed (FLOPs at the
+    owner's rate); ``byts`` the bytes it must move while running.  While
+    in flight the span demands ``byts / duration`` bytes/s; if the
+    allocator grants less, the span runs at ``alloc / demand`` of full
+    speed and its wall (virtual) length stretches — ``t_end - t_start >=
+    duration`` always, with equality only when never constrained.  A span
+    is the unit both evaluation paths share: a CNN layer task in the
+    simulator, a prefill/decode op in the live scheduler."""
     duration: float                 # seconds at full compute speed
     byts: float                     # bytes to move while running
     key: object = None              # caller tag (partition id, op kind, ...)
@@ -154,7 +200,17 @@ class ContentionTimeline:
             fn(self.now)
 
     def step(self) -> bool:
-        """Advance to the next event; returns False when nothing is left."""
+        """Advance to the next event; returns False when nothing is left.
+
+        One step = one piecewise-constant segment of the fluid model:
+        (1) fire timers due *now* (they may start spans); (2) allocate the
+        pipe max-min fair over the in-flight demands; (3) find the nearest
+        future event — the earliest span completion at current speeds or
+        the earliest pending timer; (4) integrate every span's progress at
+        its granted speed up to that instant, record the aggregate
+        allocated bandwidth segment in ``bw_samples``, and deliver the
+        completions.  Demands are re-evaluated from scratch every step, so
+        anything a callback started is picked up by the next allocation."""
         self._fire_due()
         if self.idle:
             return False
@@ -208,8 +264,12 @@ class ContentionTimeline:
     def run_chain(self, tasks, *, offset: float = 0.0, key: object = None,
                   on_task_done: Optional[Callable] = None) -> None:
         """Run ``tasks`` (objects with .dur/.byts) sequentially as spans,
-        starting after ``offset`` seconds.  ``on_task_done(i, t)`` fires as
-        each task completes (pass/tasklist bookkeeping for the wrappers)."""
+        starting after ``offset`` seconds — the simulator's partition
+        model: one partition = one chain, its stagger = the offset, each
+        completion callback starting the next task so the chain is always
+        exactly one span deep.  ``on_task_done(i, t)`` fires as each task
+        completes (pass/tasklist bookkeeping for the wrappers in
+        ``core.shaping_sim``)."""
         tasks = list(tasks)
         if not tasks:
             return

@@ -23,8 +23,11 @@ import argparse
 
 import numpy as np
 
+from pathlib import Path
+
 from repro.configs import get_config
 from repro.core import hw
+from repro.profiling import COST_MODELS
 from repro.serving import RequestQueue, decode_cost, prefill_cost
 from repro.serving.cluster import (ROUTERS, TRANSPORTS, make_cluster,
                                    make_worker_specs)
@@ -32,7 +35,8 @@ from repro.serving.trace_sim import phase_balanced_bandwidth
 
 
 def build_cluster_args(ap: argparse.ArgumentParser) -> None:
-    """The cluster axis flags, shared with ``serve.py --cluster``."""
+    """The cluster axis flags, shared with ``serve.py`` (which also reuses
+    the cost-model axis for its in-process fleet)."""
     ap.add_argument("--router", default="shaping", choices=list(ROUTERS),
                     help="request routing + prefill-grant policy: "
                          "round_robin (phase-aligned baseline), "
@@ -45,6 +49,21 @@ def build_cluster_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--heartbeat-timeout", type=float, default=60.0,
                     help="wall seconds of silence before a worker is "
                          "declared dead and its requests fail over")
+    ap.add_argument("--cost-model", default="analytic",
+                    choices=list(COST_MODELS),
+                    help="phase pricing for the demand-shaping rule: "
+                         "'analytic' derives durations from the per-layer "
+                         "FLOPs/bytes decomposition (deterministic "
+                         "default), 'measured' uses on-device wall-clock "
+                         "EMAs with analytic cold-start fallback (see "
+                         "docs/cost_models.md)")
+    ap.add_argument("--profile", default=None, metavar="PATH",
+                    help="measured-cost calibration profile (JSON). With "
+                         "--cost-model measured: an existing file is "
+                         "loaded as a frozen, deterministic replay model; "
+                         "serve.py (in-process) additionally writes the "
+                         "profile after a live calibration run when the "
+                         "file does not exist yet")
 
 
 def run_cluster(*, arch: str, smoke: bool, workers: int, slots: int,
@@ -52,9 +71,30 @@ def run_cluster(*, arch: str, smoke: bool, workers: int, slots: int,
                 transport: str, simulated: bool, block_size: int = 16,
                 dense: bool = False, heartbeat_timeout: float = 60.0,
                 max_queue=None, deadline=None, seed: int = 0,
-                quiet: bool = False):
+                quiet: bool = False, cost_model: str = "analytic",
+                profile=None):
     """Build the request load + worker fleet, run it, print the summary.
     Returns (controller, metrics)."""
+    if profile is not None and cost_model != "measured":
+        raise ValueError(
+            f"--profile {profile} only applies to --cost-model measured; "
+            f"the {cost_model!r} model never reads a profile")
+    if profile is not None and not Path(profile).exists():
+        # cluster workers cannot merge N live timers into one file; a
+        # cluster --profile is therefore replay-only — calibrate first with
+        # the in-process CLI (serve.py --cost-model measured --profile ...)
+        raise FileNotFoundError(
+            f"--profile {profile} does not exist; calibrate it first with "
+            f"the in-process fleet: python -m repro.launch.serve "
+            f"--cost-model measured --profile {profile} ...")
+    if simulated and cost_model == "measured" and profile is None:
+        # fail here with the full story rather than letting every worker
+        # die at build_engine (under --transport mp that would surface as
+        # an opaque handshake failure)
+        raise ValueError(
+            "--simulated --cost-model measured needs --profile PATH: a "
+            "simulated engine has no device to time, so measured pricing "
+            "is replay-only (calibrate with serve.py first)")
     cfg = get_config(arch, smoke=smoke)
     peak_per_worker = hw.TPU_PEAK_FLOPS / workers
     max_len = prompt_len + 4 * gen + (cfg.n_meta_tokens or 0) + \
@@ -77,7 +117,9 @@ def run_cluster(*, arch: str, smoke: bool, workers: int, slots: int,
     specs = make_worker_specs(
         arch, workers, smoke=smoke, slots=slots, max_len=max_len,
         engine="sim" if simulated else "real", block_size=block_size,
-        paged=False if dense else None, seed=seed)
+        paged=False if dense else None, seed=seed,
+        cost_model=cost_model,
+        profile=str(profile) if profile is not None else None)
     ctl = make_cluster(specs, queue, transport=transport, router=router,
                        bandwidth=bandwidth,
                        heartbeat_timeout=heartbeat_timeout)
@@ -86,6 +128,7 @@ def run_cluster(*, arch: str, smoke: bool, workers: int, slots: int,
         s = m.summary()
         print(f"cluster: {cfg.name} workers={workers} router={router} "
               f"transport={transport} slots={workers}x{slots} "
+              f"cost_model={cost_model} "
               f"completed={s['requests_completed']}/{queue.n_submitted} "
               f"rejected={queue.n_rejected} requeued={queue.n_requeued} "
               f"failovers={ctl.n_failovers}")
@@ -130,13 +173,17 @@ def main(argv=None):
         ap.error(f"--batch must be >= 1 (got {args.batch})")
     if args.requests < 1:
         ap.error(f"--requests must be >= 1 (got {args.requests})")
+    if args.profile is not None and args.cost_model != "measured":
+        ap.error("--profile only applies to --cost-model measured; the "
+                 "analytic model never reads a profile")
     run_cluster(arch=args.arch, smoke=args.smoke, workers=args.workers,
                 slots=args.batch, prompt_len=args.prompt_len, gen=args.gen,
                 n_requests=args.requests, router=args.router,
                 transport=args.transport, simulated=args.simulated,
                 block_size=args.block_size, dense=args.dense,
                 heartbeat_timeout=args.heartbeat_timeout,
-                max_queue=args.max_queue, deadline=args.deadline)
+                max_queue=args.max_queue, deadline=args.deadline,
+                cost_model=args.cost_model, profile=args.profile)
 
 
 if __name__ == "__main__":

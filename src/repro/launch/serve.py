@@ -16,6 +16,12 @@ identical request load).
 ``--cluster N`` runs the same load as a controller + N partition-worker
 cluster instead (one OS process per worker under ``--transport mp``; see
 ``repro.launch.cluster`` for the routing/failover semantics).
+
+``--cost-model measured`` prices the demand-shaping rule from on-device
+wall-clock timings instead of the analytic decomposition; with
+``--profile PATH`` the run loads an existing calibration profile (frozen
+deterministic replay) or, when the file does not exist yet, calibrates
+live and writes it at exit — see ``docs/cost_models.md``.
 """
 from __future__ import annotations
 
@@ -27,6 +33,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import hw
 from repro.models import api as mapi
+from repro.profiling import make_cost_model, save_profile
 from repro.serving import (CLOCKS, EventScheduler, PartitionEngine,
                            RequestQueue, decode_cost, make_scheduler,
                            prefill_cost, serving_trace_report)
@@ -88,6 +95,9 @@ def main(argv=None):
         ap.error(f"--requests must be >= 1 (got {args.requests})")
     if args.cluster is not None and args.cluster < 1:
         ap.error(f"--cluster must be >= 1 (got {args.cluster})")
+    if args.profile is not None and args.cost_model != "measured":
+        ap.error("--profile only applies to --cost-model measured; the "
+                 "analytic model never reads or writes a profile")
 
     if args.cluster is not None:
         # controller + N worker-process cluster (repro.launch.cluster).
@@ -111,7 +121,8 @@ def main(argv=None):
             transport=args.transport, simulated=args.simulated,
             block_size=args.block_size, dense=args.dense,
             heartbeat_timeout=args.heartbeat_timeout,
-            max_queue=args.max_queue, deadline=args.deadline)
+            max_queue=args.max_queue, deadline=args.deadline,
+            cost_model=args.cost_model, profile=args.profile)
         return [r.tokens for r in ctl.queue.completed]
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -120,6 +131,15 @@ def main(argv=None):
     args.clock = args.clock if args.clock is not None else "event"
     slots = args.batch
     peak_per_part = hw.TPU_PEAK_FLOPS / P  # partitions split one device
+
+    # --- phase pricing: one cost model shared by the whole fleet (same
+    # shapes, same device -> shared EMA buckets warm P times faster).
+    # measured + existing profile = frozen deterministic replay; measured
+    # without one = live calibration (saved to --profile at exit, if set).
+    cost_model = None  # None -> engines default to AnalyticCostModel
+    if args.cost_model == "measured":
+        cost_model = make_cost_model("measured", cfg, peak_per_part,
+                                     profile=args.profile)
     max_len = args.prompt_len + 4 * args.gen + (cfg.n_meta_tokens or 0) + \
         (cfg.n_img_tokens or 0)
 
@@ -161,7 +181,8 @@ def main(argv=None):
                                peak_flops=peak_per_part, paged=paged,
                                block_size=args.block_size,
                                decode_fn=decode_fn, prefill_fn=prefill_fn,
-                               prefill_uniform_fn=prefill_uniform_fn)
+                               prefill_uniform_fn=prefill_uniform_fn,
+                               cost_model=cost_model)
                for p in range(P)]
 
     # pipe sized inside the load's phase dynamic range (see trace_sim);
@@ -173,9 +194,17 @@ def main(argv=None):
     m = sched.run()
     s = m.summary()
     print(f"serve: {cfg.name} P={P} stagger={args.stagger} "
-          f"clock={args.clock} slots={P}x{slots} "
-          f"completed={s['requests_completed']}"
+          f"clock={args.clock} cost_model={args.cost_model} "
+          f"slots={P}x{slots} completed={s['requests_completed']}"
           f"/{queue.n_submitted} rejected={queue.n_rejected}")
+    if cost_model is not None:
+        mode = "replay" if cost_model.timer is None else "calibrating"
+        print(f"  cost model: measured ({mode}) "
+              f"warm_buckets={cost_model.n_warm} "
+              f"observations={cost_model.n_observations}")
+        if cost_model.timer is not None and args.profile is not None:
+            out = save_profile(cost_model, args.profile)
+            print(f"  cost model: calibration profile written to {out}")
     print(f"  throughput: {s['tok_per_s_virtual']:.1f} tok/s (virtual) "
           f"{s['tok_per_s_wall']:.1f} tok/s (wall)")
     print(f"  ttft p50={s['ttft_p50']*1e3:.3g}ms p95={s['ttft_p95']*1e3:.3g}ms"

@@ -1,0 +1,34 @@
+"""Measured cost models: on-device phase timings behind one pricing API.
+
+The paper's demand-shaping rule needs each phase's memory-to-compute
+balance; the serving stack historically *derived* it analytically.  This
+package supplies both sources behind the ``CostModel`` interface:
+
+  * ``timer``      — ``PhaseTimer``: wall-clocked device ops folded into
+    per-(phase, batch-shape) EMAs (the engine blocks on op outputs via
+    ``jax.block_until_ready`` before reading the clock);
+  * ``cost_model`` — ``AnalyticCostModel`` (the deterministic default,
+    bit-for-bit the pre-cost-model pricing) and ``MeasuredCostModel``
+    (measured durations over analytic bytes/FLOPs, analytic fallback while
+    cold), plus JSON profile persistence (``save_profile`` /
+    ``load_profile``) so a calibration run replays deterministically.
+
+See ``docs/cost_models.md`` for the pipeline and the calibrate -> replay
+workflow; ``repro.serving.engine`` consumes this via its ``cost_model=``
+parameter.
+"""
+from repro.profiling.cost_model import (COST_MODELS, AnalyticCostModel,
+                                        CostModel, MeasuredCostModel,
+                                        PhaseCost, decode_cost,
+                                        load_profile, make_cost_model,
+                                        prefill_cost, prefill_cost_ragged,
+                                        save_profile)
+from repro.profiling.timer import (PhaseStat, PhaseTimer, bucket_tokens,
+                                   shape_key)
+
+__all__ = [
+    "COST_MODELS", "AnalyticCostModel", "CostModel", "MeasuredCostModel",
+    "PhaseCost", "PhaseStat", "PhaseTimer", "bucket_tokens", "decode_cost",
+    "load_profile", "make_cost_model", "prefill_cost", "prefill_cost_ragged",
+    "save_profile", "shape_key",
+]

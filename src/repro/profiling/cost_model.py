@@ -1,0 +1,382 @@
+"""Phase cost models: analytic pricing, measured pricing, JSON profiles.
+
+Everything the serving stack knows about what a phase op *costs* lives
+here.  A ``PhaseCost`` is (FLOPs, bytes, full-speed duration); its
+``demand`` (bytes/s while running) is the quantity the whole shaping
+argument runs on — the scheduler's demand policy, the cluster's shaping
+router, and the fluid simulator all price their spacing/contention from
+phase costs.
+
+Two implementations of the ``CostModel`` interface:
+
+``AnalyticCostModel`` — the deterministic oracle.  Durations come from the
+paper-calibrated per-layer (FLOPs, bytes) decomposition
+(``core.traffic.lm_layer_traces`` priced at ``KIND_EFF`` achieved-FLOPs
+efficiencies); the module-level ``prefill_cost`` / ``prefill_cost_ragged``
+/ ``decode_cost`` functions (moved here from ``serving.engine``, unchanged)
+are its implementation and remain importable for direct use.  This is the
+default everywhere and is pinned bit-for-bit against pre-cost-model
+behaviour by ``tests/test_cost_model.py``.
+
+``MeasuredCostModel`` — on-device durations.  The analytic roofline is a
+model; real bandwidth/compute balance diverges from it per layer shape
+(Stoutchinin et al.; OCCAM), so the demand-spacing rule should run on what
+the device actually does.  FLOPs and *bytes* stay analytic (they are
+shape arithmetic, not measurements), but the DURATION is replaced by the
+``PhaseTimer`` EMA for the op's shape bucket once that bucket is warm
+(``min_samples`` observations), optionally blended with the analytic
+duration (``blend`` = weight of the measured term).  Cold buckets fall
+back to the analytic duration exactly, so a cold ``MeasuredCostModel`` is
+equal to the ``AnalyticCostModel`` and a run never stalls waiting for
+calibration.
+
+Profiles: ``save_profile`` writes the timer's EMA table (plus the config
+identity and pricing parameters) as JSON; ``load_profile`` rebuilds a
+frozen, timer-less ``MeasuredCostModel`` from it, so one live calibration
+run can be replayed deterministically in simulation and CI — see
+``docs/cost_models.md`` for the calibrate -> replay workflow.
+"""
+from __future__ import annotations
+
+import json
+from collections import Counter
+from dataclasses import dataclass
+from functools import lru_cache
+from pathlib import Path
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import hw
+from repro.core.shaping_sim import KIND_EFF
+from repro.core.traffic import decode_kv_bytes, lm_layer_traces
+from repro.profiling.timer import PhaseTimer, shape_key
+
+PROFILE_VERSION = 1
+COST_MODELS = ("analytic", "measured")
+
+
+# ---------------------------------------------------------------------------
+# the cost record
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PhaseCost:
+    flops: float
+    byts: float
+    duration: float   # seconds at the partition's achieved compute rate
+
+    @property
+    def demand(self) -> float:
+        """Bytes/s wanted while the phase runs (unconstrained)."""
+        return self.byts / max(self.duration, 1e-15)
+
+    def merge(self, other: Optional["PhaseCost"]) -> "PhaseCost":
+        """Sequential composition (a refill prefill billed into a tick)."""
+        if other is None:
+            return self
+        return PhaseCost(self.flops + other.flops, self.byts + other.byts,
+                         self.duration + other.duration)
+
+
+# ---------------------------------------------------------------------------
+# analytic phase pricing (moved verbatim from serving.engine)
+# ---------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=None)
+def _traces(cfg: ModelConfig, seq: int, dtype_bytes: int) -> tuple:
+    """Memoized per-layer traces: cost estimates run every scheduler tick,
+    and the trace list is a pure function of a frozen config."""
+    return tuple(lm_layer_traces(cfg, seq, dtype_bytes))
+
+
+def _cost_from_traces(traces, batch: int, peak_flops: float,
+                      extra_bytes: float = 0.0) -> PhaseCost:
+    fl = by = dur = 0.0
+    for tr in traces:
+        eff = KIND_EFF.get(tr.kind, 0.4)
+        f = tr.flops_per_img * batch
+        fl += f
+        by += tr.weight_bytes + tr.act_bytes_per_img * batch
+        dur += f / (peak_flops * eff)
+    return PhaseCost(fl, by + extra_bytes, max(dur, 1e-15))
+
+
+def prefill_cost(cfg: ModelConfig, batch: int, prompt_len: int,
+                 peak_flops: float = hw.TPU_PEAK_FLOPS,
+                 dtype_bytes: int = 2) -> PhaseCost:
+    """One prefill wave of ``batch`` equal-length prompts (compute-bound)."""
+    return _cost_from_traces(_traces(cfg, prompt_len, dtype_bytes),
+                             batch, peak_flops)
+
+
+def prefill_cost_ragged(cfg: ModelConfig, lens: Sequence[int],
+                        peak_flops: float = hw.TPU_PEAK_FLOPS,
+                        dtype_bytes: int = 2) -> PhaseCost:
+    """One fused prefill wave over ragged prompt lengths.
+
+    FLOPs and activation traffic accumulate per prompt at its own length;
+    the weight stream is shared by the fused wave and counted once —
+    reduces exactly to ``prefill_cost`` when all lengths are equal."""
+    counts = Counter(int(l) for l in lens)
+    longest = max(counts)
+    w_by = sum(tr.weight_bytes for tr in _traces(cfg, longest, dtype_bytes))
+    fl = by = dur = 0.0
+    for plen, n in counts.items():
+        for tr in _traces(cfg, plen, dtype_bytes):
+            eff = KIND_EFF.get(tr.kind, 0.4)
+            f = tr.flops_per_img * n
+            fl += f
+            by += tr.act_bytes_per_img * n
+            dur += f / (peak_flops * eff)
+    return PhaseCost(fl, by + w_by, max(dur, 1e-15))
+
+
+def decode_cost(cfg: ModelConfig, batch: int,
+                ctx: Union[int, Sequence[int]],
+                peak_flops: float = hw.TPU_PEAK_FLOPS,
+                dtype_bytes: int = 2) -> PhaseCost:
+    """One decode step over ``batch`` slots — the KV-cache read makes this
+    the bandwidth-bound phase.  ``ctx`` is either one shared context length
+    or a per-slot vector; ragged batches price the KV read as the SUM of
+    per-slot contexts (a shared scalar over- or under-priced them)."""
+    if np.ndim(ctx) == 0:
+        kv = decode_kv_bytes(cfg, int(ctx), dtype_bytes) * batch
+    else:
+        assert len(ctx) == batch, (len(ctx), batch)
+        kv = sum(decode_kv_bytes(cfg, int(c), dtype_bytes) for c in ctx)
+    return _cost_from_traces(_traces(cfg, 1, dtype_bytes),
+                             batch, peak_flops, extra_bytes=kv)
+
+
+# ---------------------------------------------------------------------------
+# the cost-model interface
+# ---------------------------------------------------------------------------
+
+
+class CostModel:
+    """What an engine asks about phase costs, in one interface.
+
+    ``prefill(batch, prompt_len)``   — one equal-length prefill wave
+                                       (also batch-1 slot refills);
+    ``prefill_ragged(lens)``         — one fused ragged prefill wave;
+    ``decode(ctxs)``                 — one decode step over the per-slot
+                                       context vector ``ctxs``.
+
+    ``kind`` identifies the pricing source ("analytic" | "measured") —
+    carried worker-side in ``cluster.protocol.WorkerStatus.cost_source`` so
+    the controller can tell what every worker's spacing ingredients were
+    priced from.  ``timer`` is the live ``PhaseTimer`` the engine should
+    feed with wall-clocked op durations, or None when the model is frozen
+    (analytic, or a replayed profile).
+    """
+
+    kind = "abstract"
+    timer: Optional[PhaseTimer] = None
+
+    def prefill(self, batch: int, prompt_len: int) -> PhaseCost:
+        raise NotImplementedError
+
+    def prefill_ragged(self, lens: Sequence[int]) -> PhaseCost:
+        raise NotImplementedError
+
+    def decode(self, ctxs: Sequence[int]) -> PhaseCost:
+        raise NotImplementedError
+
+
+class AnalyticCostModel(CostModel):
+    """Today's deterministic pricing behind the ``CostModel`` interface —
+    a direct delegation to the module-level analytic functions, so it is
+    bit-for-bit the pre-cost-model behaviour (pinned by tests)."""
+
+    kind = "analytic"
+
+    def __init__(self, cfg: ModelConfig,
+                 peak_flops: float = hw.TPU_PEAK_FLOPS,
+                 dtype_bytes: int = 2):
+        self.cfg = cfg
+        self.peak_flops = float(peak_flops)
+        self.dtype_bytes = int(dtype_bytes)
+
+    def prefill(self, batch: int, prompt_len: int) -> PhaseCost:
+        return prefill_cost(self.cfg, batch, prompt_len, self.peak_flops,
+                            self.dtype_bytes)
+
+    def prefill_ragged(self, lens: Sequence[int]) -> PhaseCost:
+        return prefill_cost_ragged(self.cfg, lens, self.peak_flops,
+                                   self.dtype_bytes)
+
+    def decode(self, ctxs: Sequence[int]) -> PhaseCost:
+        return decode_cost(self.cfg, len(ctxs), ctxs, self.peak_flops,
+                           self.dtype_bytes)
+
+
+class MeasuredCostModel(CostModel):
+    """Measured durations over the analytic bytes/FLOPs decomposition.
+
+    Every query first prices the op analytically, then replaces the
+    *duration* with the timer's EMA for the op's shape bucket when that
+    bucket is warm:
+
+        duration = blend * ema + (1 - blend) * analytic      (warm bucket)
+        duration = analytic                                  (cold bucket)
+
+    ``blend`` defaults to 1.0 (fully measured once warm); lower it to keep
+    the analytic prior in the mix on noisy devices.  Bytes and FLOPs stay
+    analytic (shape arithmetic), so ``demand = bytes / duration`` tracks
+    the measurement: an op the device runs slower than the roofline claims
+    demands fewer bytes/s but occupies the pipe longer — exactly the
+    correction the demand-spacing rule needs to see.
+    """
+
+    kind = "measured"
+
+    def __init__(self, cfg: ModelConfig,
+                 peak_flops: float = hw.TPU_PEAK_FLOPS,
+                 dtype_bytes: int = 2, *,
+                 timer: Optional[PhaseTimer] = None, blend: float = 1.0):
+        if not 0.0 <= blend <= 1.0:
+            raise ValueError(f"blend must be in [0, 1], got {blend}")
+        self.analytic = AnalyticCostModel(cfg, peak_flops, dtype_bytes)
+        self.cfg = cfg
+        self.peak_flops = float(peak_flops)
+        self.dtype_bytes = int(dtype_bytes)
+        # a frozen (replay) model has estimates but no live timer; keep the
+        # estimate store separate from the observation hook so both modes
+        # read through the same path
+        self._store = timer if timer is not None else PhaseTimer()
+        self.timer = timer
+        self.blend = float(blend)
+
+    # -- pricing -------------------------------------------------------------
+    def _priced(self, ana: PhaseCost, phase: str, batch: int,
+                tokens: int) -> PhaseCost:
+        ema = self._store.estimate(shape_key(phase, batch, tokens))
+        if ema is None:
+            return ana  # cold start: the analytic duration, exactly
+        dur = self.blend * ema + (1.0 - self.blend) * ana.duration
+        return PhaseCost(ana.flops, ana.byts, max(dur, 1e-15))
+
+    def prefill(self, batch: int, prompt_len: int) -> PhaseCost:
+        return self._priced(self.analytic.prefill(batch, prompt_len),
+                            "prefill", batch, prompt_len)
+
+    def prefill_ragged(self, lens: Sequence[int]) -> PhaseCost:
+        return self._priced(self.analytic.prefill_ragged(lens),
+                            "prefill", len(lens), max(int(l) for l in lens))
+
+    def decode(self, ctxs: Sequence[int]) -> PhaseCost:
+        return self._priced(self.analytic.decode(ctxs),
+                            "decode", len(ctxs), sum(int(c) for c in ctxs))
+
+    # -- calibration state ---------------------------------------------------
+    @property
+    def n_observations(self) -> int:
+        return self._store.n_observations
+
+    @property
+    def n_warm(self) -> int:
+        return self._store.n_warm
+
+    def observe(self, phase: str, batch: int, tokens: int,
+                seconds: float) -> None:
+        """Inject one observation directly (tests / synthetic calibration;
+        the engine feeds the live ``timer`` itself)."""
+        self._store.observe(shape_key(phase, batch, tokens), seconds)
+
+
+# ---------------------------------------------------------------------------
+# profile persistence + factory
+# ---------------------------------------------------------------------------
+
+
+def save_profile(model: MeasuredCostModel, path) -> Path:
+    """Write the model's calibration state as JSON (deterministic layout:
+    sorted keys, so identical calibrations diff clean)."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)  # a calibration run
+    # must never lose its data to a missing output directory at exit
+    doc = {
+        "version": PROFILE_VERSION,
+        "arch": getattr(model.cfg, "name", str(model.cfg)),
+        "peak_flops": model.peak_flops,
+        "dtype_bytes": model.dtype_bytes,
+        "blend": model.blend,
+        "alpha": model._store.alpha,
+        "min_samples": model._store.min_samples,
+        "stats": model._store.to_dict(),
+    }
+    path.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+    return path
+
+
+def load_profile(path, cfg: ModelConfig, *,
+                 peak_flops: Optional[float] = None,
+                 live: bool = False) -> MeasuredCostModel:
+    """Rebuild a ``MeasuredCostModel`` from a saved profile.
+
+    The default is a FROZEN model (``timer is None``): it prices from the
+    saved EMAs and never changes — the deterministic replay mode simulation
+    and CI use.  ``live=True`` re-attaches the loaded store as a live timer
+    so a new run keeps calibrating on top of the profile.
+
+    ``peak_flops`` overrides the saved pricing rate for the analytic
+    fallback/bytes side (a profile calibrated at P=4's 1/4-device rate
+    replayed in a differently sized fleet); the measured EMAs are raw
+    seconds and carry over as-is.  A profile saved for a different arch is
+    rejected — durations do not transfer across models.
+    """
+    path = Path(path)
+    doc = json.loads(path.read_text())
+    if doc.get("version") != PROFILE_VERSION:
+        raise ValueError(f"{path}: unsupported profile version "
+                         f"{doc.get('version')!r} (want {PROFILE_VERSION})")
+    arch = getattr(cfg, "name", str(cfg))
+    if doc.get("arch") != arch:
+        raise ValueError(f"{path}: profile was calibrated for "
+                         f"{doc.get('arch')!r}, not {arch!r}")
+    store = PhaseTimer.from_dict(doc["stats"], alpha=doc.get("alpha", 0.25),
+                                 min_samples=doc.get("min_samples", 3))
+    model = MeasuredCostModel(
+        cfg,
+        peak_flops=float(peak_flops if peak_flops is not None
+                         else doc["peak_flops"]),
+        dtype_bytes=int(doc.get("dtype_bytes", 2)),
+        timer=store, blend=float(doc.get("blend", 1.0)))
+    if not live:
+        model.timer = None  # frozen: estimates stay, observation hook off
+    return model
+
+
+def make_cost_model(name: str, cfg: ModelConfig,
+                    peak_flops: float = hw.TPU_PEAK_FLOPS, *,
+                    profile=None, dtype_bytes: int = 2,
+                    blend: Optional[float] = None) -> CostModel:
+    """One factory for the CLI / WorkerSpec axis.
+
+    ``analytic``                    -> the deterministic default;
+    ``measured``                    -> live calibration (fresh PhaseTimer);
+    ``measured`` + existing profile -> frozen deterministic replay.
+
+    ``blend=None`` means "the profile's saved value" on replay and the
+    fully-measured 1.0 for a fresh calibration; an explicit ``blend``
+    overrides either (a loaded profile keeps its saved ``dtype_bytes`` —
+    durations were calibrated against that layout)."""
+    if name not in COST_MODELS:
+        raise ValueError(f"cost model must be one of {COST_MODELS}, "
+                         f"got {name!r}")
+    if name == "analytic":
+        return AnalyticCostModel(cfg, peak_flops, dtype_bytes)
+    if profile is not None and Path(profile).exists():
+        model = load_profile(profile, cfg, peak_flops=peak_flops)
+        if blend is not None:
+            if not 0.0 <= blend <= 1.0:
+                raise ValueError(f"blend must be in [0, 1], got {blend}")
+            model.blend = float(blend)
+        return model
+    return MeasuredCostModel(cfg, peak_flops, dtype_bytes,
+                             timer=PhaseTimer(),
+                             blend=1.0 if blend is None else blend)

@@ -11,7 +11,9 @@ the legacy lockstep tick (regression oracle).  ``queue`` handles
 admission/deadlines, ``kv_pool`` owns the paged KV-cache block pool behind
 per-slot continuous batching, ``metrics`` observes per-span demand, and
 ``trace_sim`` validates the std-reduction claim with the Fig. 5 fluid
-simulation on the very same timeline.  ``cluster`` lifts the fleet out of
+simulation on the very same timeline.  Phase pricing comes from each
+engine's ``repro.profiling`` cost model — analytic by default, on-device
+measured durations via ``cost_model=`` (see ``docs/cost_models.md``).  ``cluster`` lifts the fleet out of
 the process: a message-protocol controller routes requests to N partition
 workers (loopback or multiprocessing transports) with heartbeat failover —
 see ``repro.serving.cluster``.

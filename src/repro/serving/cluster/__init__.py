@@ -42,16 +42,19 @@ def make_worker_specs(arch: str, n_workers: int, *, smoke: bool = True,
                       peak_flops_total: float = hw.TPU_PEAK_FLOPS,
                       engine: str = "sim", wave_only: bool = False,
                       block_size: int = 16, paged: Optional[bool] = None,
-                      seed: int = 0) -> List[WorkerSpec]:
+                      seed: int = 0, cost_model: str = "analytic",
+                      profile: Optional[str] = None) -> List[WorkerSpec]:
     """One spec per worker; the fleet splits ``peak_flops_total`` evenly
     (the paper's 1/P compute split) and each worker learns the cluster
-    width for submesh pinning."""
+    width for submesh pinning.  ``cost_model`` / ``profile`` pick each
+    worker's phase-pricing source (see ``WorkerSpec``)."""
     return [WorkerSpec(wid=w, arch=arch, smoke=smoke, slots=slots,
                        max_len=max_len,
                        peak_flops=peak_flops_total / n_workers,
                        engine=engine, wave_only=wave_only,
                        block_size=block_size, paged=paged,
-                       partitions=n_workers, seed=seed)
+                       partitions=n_workers, seed=seed,
+                       cost_model=cost_model, profile=profile)
             for w in range(n_workers)]
 
 

@@ -102,11 +102,15 @@ class WorkerStatus:
     """Engine predicate snapshot, piggybacked on every worker reply.
 
     ``head_arrival`` is the backlog head's arrival (FIFO-urgency ordering
-    of prefill grants); ``pre_dur`` / ``wave_dur`` are the engine's analytic
+    of prefill grants); ``pre_dur`` / ``wave_dur`` are the engine's
     prefill-duration and wave-time estimates — exactly the quantities the
     in-process demand policy prices ``max(pre, wave / P)`` spacing from —
-    computed worker-side so both sides of the boundary use the identical
-    cost model.  They are 0.0 when the backlog is empty."""
+    computed worker-side by the worker's own ``CostModel`` so both sides of
+    the boundary use the identical pricing.  They are 0.0 when the backlog
+    is empty.  ``cost_source`` names that pricing source ("analytic" |
+    "measured"): with a ``MeasuredCostModel`` the spacing ingredients are
+    the worker's on-device timings, and the controller mirror stays
+    consistent with them without ever re-pricing controller-side."""
     busy: bool
     wants_prefill: bool
     backlog_len: int
@@ -114,6 +118,7 @@ class WorkerStatus:
     head_arrival: float = 0.0
     pre_dur: float = 0.0
     wave_dur: float = 0.0
+    cost_source: str = "analytic"
 
 
 # ---------------------------------------------------------------------------

@@ -41,8 +41,10 @@ class WorkerRuntime:
             head = e.backlog[0]
             head_arrival = float(head.arrival)
             if e.wants_prefill:
-                # the demand-spacing ingredients, priced engine-side with
-                # the same analytic estimators the in-process policy uses
+                # the demand-spacing ingredients, priced engine-side by the
+                # worker's own cost model (analytic by default; measured
+                # on-device timings under --cost-model measured) — the same
+                # estimators the in-process policy uses
                 pre = e.prefill_cost_est()
                 pre_dur = pre.duration
                 wave_dur = pre.duration + head.max_new_tokens * \
@@ -51,7 +53,8 @@ class WorkerRuntime:
             busy=e.busy, wants_prefill=e.wants_prefill,
             backlog_len=len(e.backlog),
             n_active=sum(1 for r in e.active if r is not None),
-            head_arrival=head_arrival, pre_dur=pre_dur, wave_dur=wave_dur)
+            head_arrival=head_arrival, pre_dur=pre_dur, wave_dur=wave_dur,
+            cost_source=e.cost_model.kind)
 
     def hello(self) -> P.Hello:
         return P.Hello(wid=self.engine.pid, slots=self.engine.slots,
@@ -112,7 +115,14 @@ class WorkerRuntime:
 
 @dataclass(frozen=True)
 class WorkerSpec:
-    """Everything a worker process needs to build its engine."""
+    """Everything a worker process needs to build its engine.
+
+    ``cost_model`` picks the phase-pricing source ("analytic" |
+    "measured"); ``profile`` is an optional path to a saved calibration
+    profile — with ``cost_model="measured"`` an existing profile is loaded
+    as a FROZEN replay model (deterministic across the fleet), a missing
+    one means each worker calibrates live with its own ``PhaseTimer``.
+    """
     wid: int
     arch: str
     smoke: bool
@@ -125,6 +135,8 @@ class WorkerSpec:
     paged: Optional[bool] = None
     partitions: int = 1          # submesh group count (real engines)
     seed: int = 0
+    cost_model: str = "analytic"  # phase pricing: "analytic" | "measured"
+    profile: Optional[str] = None  # saved calibration profile (replay)
 
 
 def _partition_mesh(spec: WorkerSpec):
@@ -146,12 +158,26 @@ def build_engine(spec: WorkerSpec) -> EngineBase:
     """Build the engine a spec describes (used by subprocess workers and by
     the loopback transport, so both paths serve identical engines)."""
     from repro.configs import get_config
+    from repro.profiling import make_cost_model
     from repro.serving.engine import SimulatedEngine
 
     cfg = get_config(spec.arch, smoke=spec.smoke)
+    cost_model = make_cost_model(spec.cost_model, cfg, spec.peak_flops,
+                                 profile=spec.profile)
+    if spec.engine == "sim" and cost_model.timer is not None:
+        # a live timer on a SimulatedEngine would fold the Python wall
+        # time of synthetic token generation — not device time — into the
+        # EMAs and silently wreck the spacing rule; measured pricing on
+        # sim engines is replay-only
+        raise ValueError(
+            "cost_model='measured' on a simulated engine requires a "
+            "calibration profile (the sim has no device to time); "
+            "calibrate with the real in-process fleet first: "
+            "python -m repro.launch.serve --cost-model measured "
+            "--profile PATH ...")
     kw = dict(slots=spec.slots, max_len=spec.max_len, pid=spec.wid,
               peak_flops=spec.peak_flops, wave_only=spec.wave_only,
-              block_size=spec.block_size)
+              block_size=spec.block_size, cost_model=cost_model)
     if spec.engine == "sim":
         return SimulatedEngine(cfg, **kw)
     if spec.engine != "real":

@@ -25,118 +25,39 @@ same ragged/refill semantics inside one ``(L, slots, max_len)`` slab — and
 is the oracle the paged engine is equivalence-tested against.
 
 Phase costs (FLOPs / bytes / duration / bandwidth demand) come from the
-analytic LM traces in ``repro.core.traffic`` — the same per-layer
-(FLOPs, bytes) decomposition the paper's simulator consumes.  Decode
-pricing sums each active slot's own context (``decode_cost`` takes a
-per-slot ctx vector), so the scheduler's ``demand`` policy sees the true
-ragged KV read, consistent with ``core.traffic``.
+engine's ``CostModel`` (``repro.profiling.cost_model``).  The default
+``AnalyticCostModel`` prices from the analytic LM traces in
+``repro.core.traffic`` — the same per-layer (FLOPs, bytes) decomposition
+the paper's simulator consumes; a ``MeasuredCostModel`` replaces the
+durations with on-device timings (the engine feeds its ``PhaseTimer`` by
+wall-clocking each issued op, blocking on the device via
+``jax.block_until_ready`` before reading the clock).  Decode pricing sums
+each active slot's own context (``CostModel.decode`` takes a per-slot ctx
+vector), so the scheduler's ``demand`` policy sees the true ragged KV
+read, consistent with ``core.traffic``.  ``PhaseCost`` and the analytic
+pricing functions are re-exported here for back-compat (they lived in
+this module before ``repro.profiling`` existed).
 """
 from __future__ import annotations
 
 import math
-from collections import Counter
+import time
 from dataclasses import dataclass, field
-from functools import lru_cache
-from typing import List, Optional, Sequence, Union
+from typing import List, Optional
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import hw
-from repro.core.shaping_sim import KIND_EFF
-from repro.core.traffic import decode_kv_bytes, lm_layer_traces
+# PhaseCost + the analytic pricing functions moved to repro.profiling;
+# re-exported here because the rest of the stack (and downstream users)
+# import them from repro.serving.engine.
+from repro.profiling.cost_model import (AnalyticCostModel,  # noqa: F401
+                                        CostModel, PhaseCost, decode_cost,
+                                        prefill_cost, prefill_cost_ragged)
+from repro.profiling.timer import shape_key
 from repro.serving.kv_pool import BlockPool, PoolExhausted
 from repro.serving.queue import Request
-
-
-# ---------------------------------------------------------------------------
-# analytic phase costs
-# ---------------------------------------------------------------------------
-
-
-@dataclass(frozen=True)
-class PhaseCost:
-    flops: float
-    byts: float
-    duration: float   # seconds at the partition's achieved compute rate
-
-    @property
-    def demand(self) -> float:
-        """Bytes/s wanted while the phase runs (unconstrained)."""
-        return self.byts / max(self.duration, 1e-15)
-
-    def merge(self, other: Optional["PhaseCost"]) -> "PhaseCost":
-        """Sequential composition (a refill prefill billed into a tick)."""
-        if other is None:
-            return self
-        return PhaseCost(self.flops + other.flops, self.byts + other.byts,
-                         self.duration + other.duration)
-
-
-@lru_cache(maxsize=None)
-def _traces(cfg: ModelConfig, seq: int, dtype_bytes: int) -> tuple:
-    """Memoized per-layer traces: cost estimates run every scheduler tick,
-    and the trace list is a pure function of a frozen config."""
-    return tuple(lm_layer_traces(cfg, seq, dtype_bytes))
-
-
-def _cost_from_traces(traces, batch: int, peak_flops: float,
-                      extra_bytes: float = 0.0) -> PhaseCost:
-    fl = by = dur = 0.0
-    for tr in traces:
-        eff = KIND_EFF.get(tr.kind, 0.4)
-        f = tr.flops_per_img * batch
-        fl += f
-        by += tr.weight_bytes + tr.act_bytes_per_img * batch
-        dur += f / (peak_flops * eff)
-    return PhaseCost(fl, by + extra_bytes, max(dur, 1e-15))
-
-
-def prefill_cost(cfg: ModelConfig, batch: int, prompt_len: int,
-                 peak_flops: float = hw.TPU_PEAK_FLOPS,
-                 dtype_bytes: int = 2) -> PhaseCost:
-    """One prefill wave of ``batch`` equal-length prompts (compute-bound)."""
-    return _cost_from_traces(_traces(cfg, prompt_len, dtype_bytes),
-                             batch, peak_flops)
-
-
-def prefill_cost_ragged(cfg: ModelConfig, lens: Sequence[int],
-                        peak_flops: float = hw.TPU_PEAK_FLOPS,
-                        dtype_bytes: int = 2) -> PhaseCost:
-    """One fused prefill wave over ragged prompt lengths.
-
-    FLOPs and activation traffic accumulate per prompt at its own length;
-    the weight stream is shared by the fused wave and counted once —
-    reduces exactly to ``prefill_cost`` when all lengths are equal."""
-    counts = Counter(int(l) for l in lens)
-    longest = max(counts)
-    w_by = sum(tr.weight_bytes for tr in _traces(cfg, longest, dtype_bytes))
-    fl = by = dur = 0.0
-    for plen, n in counts.items():
-        for tr in _traces(cfg, plen, dtype_bytes):
-            eff = KIND_EFF.get(tr.kind, 0.4)
-            f = tr.flops_per_img * n
-            fl += f
-            by += tr.act_bytes_per_img * n
-            dur += f / (peak_flops * eff)
-    return PhaseCost(fl, by + w_by, max(dur, 1e-15))
-
-
-def decode_cost(cfg: ModelConfig, batch: int,
-                ctx: Union[int, Sequence[int]],
-                peak_flops: float = hw.TPU_PEAK_FLOPS,
-                dtype_bytes: int = 2) -> PhaseCost:
-    """One decode step over ``batch`` slots — the KV-cache read makes this
-    the bandwidth-bound phase.  ``ctx`` is either one shared context length
-    or a per-slot vector; ragged batches price the KV read as the SUM of
-    per-slot contexts (a shared scalar over- or under-priced them)."""
-    if np.ndim(ctx) == 0:
-        kv = decode_kv_bytes(cfg, int(ctx), dtype_bytes) * batch
-    else:
-        assert len(ctx) == batch, (len(ctx), batch)
-        kv = sum(decode_kv_bytes(cfg, int(c), dtype_bytes) for c in ctx)
-    return _cost_from_traces(_traces(cfg, 1, dtype_bytes),
-                             batch, peak_flops, extra_bytes=kv)
 
 
 @dataclass
@@ -189,13 +110,21 @@ class EngineBase:
     def __init__(self, cfg: ModelConfig, *, slots: int, max_len: int,
                  pid: int = 0, peak_flops: float = hw.TPU_PEAK_FLOPS,
                  block_size: int = 16, pool_blocks: Optional[int] = None,
-                 wave_only: bool = False):
+                 wave_only: bool = False,
+                 cost_model: Optional[CostModel] = None):
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
         self.pid = pid
         self.peak_flops = peak_flops
         self.block_size = block_size
+        # phase pricing: analytic by default (bit-for-bit the historical
+        # behaviour); a MeasuredCostModel swaps in on-device durations and
+        # its live timer (if any) is fed by _run_timed below
+        self.cost_model = cost_model if cost_model is not None \
+            else AnalyticCostModel(cfg, peak_flops)
+        # shape buckets whose compile-tainted first sample was discarded
+        self._timed_warm: set = set()
         # wave-only batching: freed slots wait for the engine to drain and
         # the next *policy-granted* prefill wave instead of refilling
         # immediately (the enc-dec behaviour, also the load shape of the
@@ -245,7 +174,7 @@ class EngineBase:
     def prefill_cost_est(self) -> PhaseCost:
         n = min(self.slots, max(len(self.backlog), 1))
         plen = self.backlog[0].prompt_len if self.backlog else self.max_len // 2
-        return prefill_cost(self.cfg, n, plen, self.peak_flops)
+        return self.cost_model.prefill(n, plen)
 
     def decode_cost_est(self) -> PhaseCost:
         ctxs = [max(l, 1) for r, l in zip(self.active, self.slot_lens)
@@ -254,7 +183,35 @@ class EngineBase:
             plen = (self.backlog[0].prompt_len if self.backlog
                     else self.max_len // 2)
             ctxs = [max(self._prefix + plen, 1)] * self.slots
-        return decode_cost(self.cfg, len(ctxs), ctxs, self.peak_flops)
+        return self.cost_model.decode(ctxs)
+
+    # -- on-device timing: feed the cost model's live PhaseTimer -------------
+    def _run_timed(self, phase: str, batch: int, tokens: int, fn):
+        """Run a model-execution hook, wall-clocking it into the cost
+        model's timer when one is attached.
+
+        Both edges must block on the device (``_sync_device``): JAX
+        dispatch is asynchronous, so work queued by a PREVIOUS op would
+        otherwise bill into this measurement, and the return of ``fn``
+        alone does not mean this op ran.  The first sample per shape
+        bucket is discarded — the first execution of a jitted fn at a new
+        shape includes XLA compilation (seconds against microseconds of
+        steady-state run time), and an EMA never fully forgets a sample
+        that large."""
+        timer = self.cost_model.timer
+        if timer is None:
+            return fn()
+        self._sync_device()
+        t0 = time.perf_counter()
+        out = fn()
+        self._sync_device()
+        dt = time.perf_counter() - t0
+        key = shape_key(phase, batch, tokens)
+        if key in self._timed_warm:
+            timer.observe(key, dt)
+        else:
+            self._timed_warm.add(key)   # compile-tainted: discard
+        return out
 
     # -- phase execution: issue (eager) / commit (clock-timed) ---------------
     def issue_prefill(self) -> PendingOp:
@@ -279,9 +236,10 @@ class EngineBase:
                 f"{self.pool.blocks_for(self._ctx_budget(self.backlog[0]))} "
                 f"blocks; pool has {self.pool.n_free} of {self.pool.n_blocks}")
         self.backlog = self.backlog[len(wave):]
-        cost = prefill_cost_ragged(self.cfg, [r.prompt_len for r in wave],
-                                   self.peak_flops)
-        first = self._run_prefill(wave)
+        lens = [r.prompt_len for r in wave]
+        cost = self.cost_model.prefill_ragged(lens)
+        first = self._run_timed("prefill", len(wave), max(lens),
+                                lambda: self._run_prefill(wave))
         for i, req in enumerate(wave):
             self.active[i] = req
             self.slot_lens[i] = self._prefix + req.prompt_len
@@ -300,8 +258,9 @@ class EngineBase:
         assert self.busy, "issue_decode() on an engine with no active slots"
         ctxs = [max(l, 1) for r, l in zip(self.active, self.slot_lens)
                 if r is not None]
-        cost = decode_cost(self.cfg, len(ctxs), ctxs, self.peak_flops)
-        toks = self._run_decode()
+        cost = self.cost_model.decode(ctxs)
+        toks = self._run_timed("decode", len(ctxs), sum(ctxs),
+                               self._run_decode)
         firsts: List[Request] = []
         for i, req in enumerate(self.active):
             if req is None:
@@ -366,8 +325,9 @@ class EngineBase:
                 self.backlog.pop(0)
                 self.slot_tables[i] = self.pool.alloc_for_tokens(
                     self._ctx_budget(nxt))
-                c = prefill_cost(self.cfg, 1, nxt.prompt_len, self.peak_flops)
-                tok = self._refill_slot(i, nxt)
+                c = self.cost_model.prefill(1, nxt.prompt_len)
+                tok = self._run_timed("prefill", 1, nxt.prompt_len,
+                                      lambda: self._refill_slot(i, nxt))
                 self.active[i] = nxt
                 self.slot_lens[i] = self._prefix + nxt.prompt_len
                 self.assign_order.append(nxt.rid)
@@ -386,6 +346,12 @@ class EngineBase:
     # -- model-execution hooks ----------------------------------------------
     def _supports_slot_refill(self) -> bool:
         return not self.wave_only
+
+    def _sync_device(self) -> None:
+        """Block until the engine's device state is materialized (the stop
+        edge of a phase-op wall-clock measurement).  The base/simulated
+        engine has no device; the real engine overrides this with
+        ``jax.block_until_ready`` over its cache/pages/logits."""
 
     def _run_prefill(self, wave: List[Request]):
         """Seat ``wave`` in slots [0, len(wave)); returns per-slot first
@@ -427,10 +393,12 @@ class PartitionEngine(EngineBase):
                  decode_fn=None, prefill_fn=None, prefill_uniform_fn=None,
                  paged: Optional[bool] = None,
                  block_size: int = 16, pool_blocks: Optional[int] = None,
-                 wave_only: bool = False):
+                 wave_only: bool = False,
+                 cost_model: Optional[CostModel] = None):
         super().__init__(cfg, slots=slots, max_len=max_len, pid=pid,
                          peak_flops=peak_flops, block_size=block_size,
-                         pool_blocks=pool_blocks, wave_only=wave_only)
+                         pool_blocks=pool_blocks, wave_only=wave_only,
+                         cost_model=cost_model)
         import jax
 
         self.api = api
@@ -657,6 +625,17 @@ class PartitionEngine(EngineBase):
 
     def _supports_slot_refill(self) -> bool:
         return self.cfg.family != "encdec" and not self.wave_only
+
+    def _sync_device(self) -> None:
+        """Wait for the issued op's device work: block on whichever arrays
+        the last phase touched (next-token buffer + dense cache or paged
+        pool).  ``block_until_ready`` walks pytrees, so the dict states are
+        passed whole."""
+        import jax
+
+        for obj in (self._last_tok, self.cache, self.pages):
+            if obj is not None:
+                jax.block_until_ready(obj)
 
 
 class SimulatedEngine(EngineBase):

@@ -18,9 +18,11 @@ Stagger policies (shared by both clocks):
             event clock).
   demand  — model-driven stagger: successive prefill-wave starts are
             spaced at least ``max(prefill_duration, wave_time / P)`` apart
-            on the virtual clock, both terms priced from the analytic
-            per-phase bytes/FLOPs estimates (``core.traffic
-            .lm_layer_traces``).  Spacing by the prefill duration means
+            on the virtual clock, both terms priced from each engine's
+            ``CostModel`` (``repro.profiling``): the analytic per-phase
+            bytes/FLOPs estimates by default, on-device measured durations
+            when a ``MeasuredCostModel`` is attached (``--cost-model
+            measured``).  Spacing by the prefill duration means
             two partitions are never in the compute-bound phase at the
             same instant; spacing by ``wave_time / P`` spreads the wave
             starts across the whole wave period when prefill is short —
@@ -79,8 +81,9 @@ def _top_up_backlogs(engines: List, queue: RequestQueue) -> None:
 
 def _demand_spacing(engine, n_engines: int) -> float:
     """The demand policy's wave-start spacing, priced from the engine's
-    analytic phase estimates: ``max(prefill_duration, wave_time / P)``
-    (shared by both clocks so they gate on the identical quantity)."""
+    cost model (analytic by default, measured when one is attached):
+    ``max(prefill_duration, wave_time / P)`` (shared by both clocks so
+    they gate on the identical quantity)."""
     pre = engine.prefill_cost_est()
     gen_est = engine.backlog[0].max_new_tokens
     wave = pre.duration + gen_est * engine.decode_cost_est().duration

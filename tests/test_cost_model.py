@@ -1,0 +1,367 @@
+"""repro.profiling: measured cost models, profiles, and their fallbacks.
+
+Pins the PR's acceptance gates:
+  * analytic default — ``AnalyticCostModel`` (and an engine built without
+    ``cost_model=``) prices bit-for-bit identically to the pre-cost-model
+    functions, and a fleet on the explicit analytic model reproduces the
+    default fleet's schedule exactly;
+  * cold start — a ``MeasuredCostModel`` with no (or too few) observations
+    falls back to the analytic duration EXACTLY, per bucket;
+  * profile round trip — save -> load reproduces identical phase costs and
+    identical demand-spacing decisions (full-run schedule equality);
+  * P=1 measured == analytic — when the injected durations match the
+    analytic ones the measured-priced run is exactly the analytic run
+    (and a skewed injection provably changes the schedule, so the
+    measured path is live, not accidentally cold);
+  * cluster — workers built from a ``WorkerSpec`` with
+    ``cost_model="measured"`` price worker-side and report
+    ``cost_source="measured"`` in every status snapshot.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import hw
+from repro.profiling import (AnalyticCostModel, MeasuredCostModel,
+                             PhaseTimer, bucket_tokens, load_profile,
+                             make_cost_model, prefill_cost,
+                             prefill_cost_ragged, save_profile, shape_key)
+from repro.profiling.cost_model import decode_cost
+from repro.serving import RequestQueue, SimulatedEngine, make_scheduler
+from repro.serving.scheduler import _demand_spacing
+
+
+def _cfg():
+    return get_config("qwen2-7b", smoke=True)
+
+
+def _load(queue, n, prompt_len=8, gen=4):
+    rng = np.random.default_rng(0)
+    for _ in range(n):
+        queue.submit(rng.integers(1, 100, size=(prompt_len,))
+                     .astype(np.int32), gen)
+
+
+def _fleet(cfg, partitions, slots=2, cost_model=None, wave_only=False):
+    return [SimulatedEngine(cfg, slots=slots, max_len=64, pid=p,
+                            peak_flops=hw.TPU_PEAK_FLOPS / partitions,
+                            wave_only=wave_only, cost_model=cost_model)
+            for p in range(partitions)]
+
+
+def _run(cfg, partitions, cost_model=None, n=12, prompt_len=8, gen=4,
+         policy="demand", bandwidth=1e30, slots=2, wave_only=False):
+    q = RequestQueue()
+    _load(q, n, prompt_len=prompt_len, gen=gen)
+    sched = make_scheduler(
+        _fleet(cfg, partitions, slots=slots, cost_model=cost_model,
+               wave_only=wave_only),
+        q, policy=policy, bandwidth=bandwidth, clock="event")
+    m = sched.run()
+    assert len(q.completed) == n
+    times = sorted((r.rid, r.t_first_token, r.t_done) for r in q.completed)
+    return times, m
+
+
+def _vsummary(m):
+    """The machine-independent side of a metrics summary (wall-clock
+    throughput depends on the host and cannot be pinned exactly)."""
+    return {k: v for k, v in m.summary().items() if k != "tok_per_s_wall"}
+
+
+# ---------------------------------------------------------------------------
+# the analytic model and the engine default: bit-for-bit the old behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_analytic_model_matches_functions_exactly():
+    cfg = _cfg()
+    peak = hw.TPU_PEAK_FLOPS / 4
+    am = AnalyticCostModel(cfg, peak)
+    assert am.prefill(3, 16) == prefill_cost(cfg, 3, 16, peak)
+    assert am.prefill_ragged([8, 16, 16]) == \
+        prefill_cost_ragged(cfg, [8, 16, 16], peak)
+    assert am.decode([9, 11, 20]) == decode_cost(cfg, 3, [9, 11, 20], peak)
+
+
+def test_engine_default_cost_model_is_analytic():
+    cfg = _cfg()
+    eng = _fleet(cfg, 4)[0]
+    assert eng.cost_model.kind == "analytic"
+    eng.assign([])
+    # est paths delegate to the model, which delegates to the functions
+    assert eng.decode_cost_est() == decode_cost(
+        cfg, eng.slots, [max(eng._prefix + 32, 1)] * eng.slots,
+        eng.peak_flops)
+
+
+def test_explicit_analytic_model_reproduces_default_schedule():
+    """An engine given AnalyticCostModel explicitly must schedule exactly
+    like an engine left on its default — the pre-PR pin."""
+    cfg = _cfg()
+    t_default, m_default = _run(cfg, 4)
+    t_explicit, m_explicit = _run(
+        cfg, 4, cost_model=AnalyticCostModel(cfg, hw.TPU_PEAK_FLOPS / 4))
+    assert t_default == t_explicit
+    assert _vsummary(m_default) == _vsummary(m_explicit)
+
+
+# ---------------------------------------------------------------------------
+# timer: EMA folding, warm threshold, bucketing
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_tokens_powers_of_two():
+    assert [bucket_tokens(n) for n in (1, 2, 3, 8, 9, 100)] == \
+        [1, 2, 4, 8, 16, 128]
+
+
+def test_timer_ema_and_warm_threshold():
+    t = PhaseTimer(alpha=0.5, min_samples=2)
+    k = shape_key("decode", 4, 100)
+    assert k == ("decode", 4, 128)
+    assert t.estimate(k) is None
+    t.observe(k, 1.0)
+    assert t.estimate(k) is None          # one sample: still cold
+    t.observe(k, 3.0)
+    assert t.estimate(k) == pytest.approx(2.0)   # 0.5*3 + 0.5*1
+    assert t.n_warm == 1 and t.n_observations == 2
+    with pytest.raises(ValueError):
+        t.observe(k, -1.0)
+
+
+# ---------------------------------------------------------------------------
+# measured model: cold-start fallback, warm pricing, blending
+# ---------------------------------------------------------------------------
+
+
+def test_measured_cold_start_equals_analytic_exactly():
+    cfg = _cfg()
+    peak = hw.TPU_PEAK_FLOPS / 2
+    mm = MeasuredCostModel(cfg, peak, timer=PhaseTimer())
+    am = AnalyticCostModel(cfg, peak)
+    assert mm.prefill(2, 8) == am.prefill(2, 8)
+    assert mm.prefill_ragged([4, 8]) == am.prefill_ragged([4, 8])
+    assert mm.decode([8, 9]) == am.decode([8, 9])
+    # below the warm threshold the bucket is still cold
+    mm.observe("prefill", 2, 8, 123.0)
+    assert mm.prefill(2, 8) == am.prefill(2, 8)
+
+
+def test_measured_warm_bucket_replaces_duration_only():
+    cfg = _cfg()
+    mm = MeasuredCostModel(cfg, hw.TPU_PEAK_FLOPS, timer=PhaseTimer())
+    am = mm.analytic
+    for _ in range(mm._store.min_samples):
+        mm.observe("decode", 2, 17, 0.5)
+    c, a = mm.decode([8, 9]), am.decode([8, 9])
+    assert c.duration == pytest.approx(0.5)
+    assert (c.flops, c.byts) == (a.flops, a.byts)   # analytic shape math
+    # every ctx vector summing into the same bucket shares the estimate
+    assert mm.decode([10, 20]).duration == pytest.approx(0.5)
+
+
+def test_measured_blend_mixes_measured_and_analytic():
+    cfg = _cfg()
+    mm = MeasuredCostModel(cfg, hw.TPU_PEAK_FLOPS, timer=PhaseTimer(),
+                           blend=0.25)
+    ana_dur = mm.analytic.prefill(1, 8).duration
+    for _ in range(mm._store.min_samples):
+        mm.observe("prefill", 1, 8, 4 * ana_dur)
+    assert mm.prefill(1, 8).duration == \
+        pytest.approx(0.25 * 4 * ana_dur + 0.75 * ana_dur)
+
+
+# ---------------------------------------------------------------------------
+# profile persistence: save -> load -> identical pricing and spacing
+# ---------------------------------------------------------------------------
+
+
+def _warmed_model(cfg, peak, skew=1.5, slots=2, prompt_len=8, gen=4):
+    """A FROZEN measured model whose durations are analytic x ``skew`` for
+    every bucket a (slots, prompt_len, gen) serving run can hit.  Frozen
+    (timer detached) because a live timer on a SimulatedEngine would fold
+    the python wall time of token synthesis — meaningless here — into the
+    injected estimates."""
+    mm = MeasuredCostModel(cfg, peak, timer=PhaseTimer())
+    am = mm.analytic
+    n = mm._store.min_samples
+    for b in range(1, slots + 1):
+        d = am.prefill(b, prompt_len).duration * skew
+        for _ in range(n):
+            mm.observe("prefill", b, prompt_len, d)
+        for step in range(gen + 1):
+            ctxs = [prompt_len + step] * b
+            d = am.decode(ctxs).duration * skew
+            for _ in range(n):
+                mm.observe("decode", b, sum(ctxs), d)
+    mm.timer = None
+    return mm
+
+
+def test_profile_roundtrip_identical_costs_and_spacing(tmp_path):
+    cfg = _cfg()
+    peak = hw.TPU_PEAK_FLOPS / 4
+    mm = _warmed_model(cfg, peak)
+    path = save_profile(mm, tmp_path / "prof.json")
+    loaded = load_profile(path, cfg)
+    assert loaded.timer is None            # frozen: replay never mutates
+    assert loaded.n_warm == mm.n_warm
+    for b, plen in [(1, 8), (2, 8), (2, 32)]:
+        assert loaded.prefill(b, plen) == mm.prefill(b, plen)
+    assert loaded.decode([8, 9]) == mm.decode([8, 9])
+    # identical spacing decisions: same _demand_spacing on a loaded fleet...
+    e1 = _fleet(cfg, 4, cost_model=mm)[0]
+    e2 = _fleet(cfg, 4, cost_model=loaded)[0]
+    q = RequestQueue()
+    _load(q, 4)
+    e1.assign(q.pop(2)), e2.assign(q.pop(2))
+    assert _demand_spacing(e1, 4) == _demand_spacing(e2, 4)
+    # ...and an identical full schedule
+    t_orig, m_orig = _run(cfg, 4, cost_model=mm)
+    t_load, m_load = _run(cfg, 4, cost_model=loaded)
+    assert t_orig == t_load
+    assert _vsummary(m_orig) == _vsummary(m_load)
+
+
+def test_load_profile_rejects_wrong_arch(tmp_path):
+    cfg = _cfg()
+    path = save_profile(MeasuredCostModel(cfg, 1e12, timer=PhaseTimer()),
+                        tmp_path / "p.json")
+    with pytest.raises(ValueError, match="calibrated for"):
+        load_profile(path, get_config("mamba2-130m", smoke=True))
+
+
+def test_save_profile_creates_parent_dirs(tmp_path):
+    """A calibration run must never lose its data to a missing output
+    directory at the very end."""
+    cfg = _cfg()
+    path = save_profile(MeasuredCostModel(cfg, 1e12, timer=PhaseTimer()),
+                        tmp_path / "deep" / "nested" / "p.json")
+    assert path.exists()
+    assert load_profile(path, cfg).n_warm == 0
+
+
+def test_make_cost_model_blend_override_on_replay(tmp_path):
+    cfg = _cfg()
+    path = save_profile(_warmed_model(cfg, 1e12), tmp_path / "p.json")
+    assert make_cost_model("measured", cfg, 1e12, profile=path).blend == 1.0
+    over = make_cost_model("measured", cfg, 1e12, profile=path, blend=0.5)
+    assert over.blend == 0.5
+    with pytest.raises(ValueError, match="blend"):
+        make_cost_model("measured", cfg, 1e12, profile=path, blend=2.0)
+
+
+def test_engine_discards_compile_tainted_first_sample():
+    """The first op at each shape bucket includes jit compilation; its
+    wall time must not enter the EMA.  Exercised on a SimulatedEngine
+    driven directly (the CLI never attaches a live timer to one)."""
+    cfg = _cfg()
+    mm = MeasuredCostModel(cfg, hw.TPU_PEAK_FLOPS, timer=PhaseTimer())
+    eng = _fleet(cfg, 1, slots=2, cost_model=mm)[0]
+    q = RequestQueue()
+    _load(q, 2, prompt_len=8, gen=5)
+    eng.assign(q.pop(2))
+    eng.commit_op(eng.issue_prefill(), 1.0)
+    assert mm.n_observations == 0          # first prefill@bucket: discarded
+    obs = []
+    for t in range(4):                     # ctx sums 16,18,20,22 -> buckets
+        eng.commit_op(eng.issue_decode(), 2.0 + t)   # 16,32,32,32
+        obs.append(mm.n_observations)
+    # bucket 16's and bucket 32's first samples are both discarded; the
+    # remaining two decodes at bucket 32 are observed
+    assert obs == [0, 0, 1, 2]
+
+
+def test_make_cost_model_factory(tmp_path):
+    cfg = _cfg()
+    assert make_cost_model("analytic", cfg, 1e12).kind == "analytic"
+    live = make_cost_model("measured", cfg, 1e12)
+    assert live.kind == "measured" and live.timer is not None
+    path = save_profile(_warmed_model(cfg, 1e12), tmp_path / "p.json")
+    replay = make_cost_model("measured", cfg, 1e12, profile=path)
+    assert replay.kind == "measured" and replay.timer is None
+    assert replay.n_warm > 0
+    with pytest.raises(ValueError, match="cost model must be"):
+        make_cost_model("psychic", cfg, 1e12)
+
+
+# ---------------------------------------------------------------------------
+# P=1: measured == analytic exactly when the injected durations match
+# ---------------------------------------------------------------------------
+
+
+def test_p1_measured_equals_analytic_with_matching_durations():
+    """slots=1, gen=2 makes every bucket single-shape (prefill at len 8;
+    one decode at ctx 8), so injecting the analytic durations as
+    "measurements" must reproduce the analytic schedule EXACTLY — and a
+    skewed injection must not (proving the measured path is live)."""
+    cfg = _cfg()
+    peak = hw.TPU_PEAK_FLOPS
+    kw = dict(n=6, prompt_len=8, gen=2, slots=1, policy="none")
+    t_ana, m_ana = _run(cfg, 1, **kw)
+
+    matched = _warmed_model(cfg, peak, skew=1.0, slots=1, prompt_len=8,
+                            gen=2)
+    t_meas, m_meas = _run(cfg, 1, cost_model=matched, **kw)
+    assert matched.n_warm >= 2      # the run's buckets really were warm
+    assert t_ana == t_meas
+    assert _vsummary(m_ana) == _vsummary(m_meas)
+
+    skewed = _warmed_model(cfg, peak, skew=2.0, slots=1, prompt_len=8,
+                           gen=2)
+    t_skew, _ = _run(cfg, 1, cost_model=skewed, **kw)
+    assert t_skew != t_ana          # measured pricing actually drives time
+
+
+# ---------------------------------------------------------------------------
+# cluster: measured costs priced worker-side
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_worker_reports_measured_cost_source(tmp_path):
+    from repro.serving import make_cluster, make_worker_specs
+
+    cfg = _cfg()
+    path = save_profile(
+        _warmed_model(cfg, hw.TPU_PEAK_FLOPS / 2, slots=2), tmp_path / "p.json")
+    q = RequestQueue()
+    _load(q, 8)
+    specs = make_worker_specs("qwen2-7b", 2, smoke=True, slots=2,
+                              max_len=64, cost_model="measured",
+                              profile=str(path))
+    ctl = make_cluster(specs, q, transport="loopback", router="shaping",
+                       bandwidth=1e30)
+    for v in ctl.views_in_order():
+        assert v.status.cost_source == "measured"
+    ctl.run()
+    assert len(q.completed) == 8
+    assert all(v.status.cost_source == "measured"
+               for v in ctl.views_in_order())
+
+
+def test_sim_worker_refuses_live_measured_model():
+    """Measured pricing on a SimulatedEngine is replay-only: a live timer
+    would fold Python wall time (not device time) into the EMAs."""
+    from repro.serving.cluster.worker import WorkerSpec, build_engine
+
+    spec = WorkerSpec(wid=0, arch="qwen2-7b", smoke=True, slots=2,
+                      max_len=64, peak_flops=1e12, engine="sim",
+                      cost_model="measured", profile=None)
+    with pytest.raises(ValueError, match="requires a calibration profile"):
+        build_engine(spec)
+
+
+def test_cluster_default_cost_source_is_analytic():
+    from repro.serving import make_cluster, make_worker_specs
+
+    q = RequestQueue()
+    _load(q, 4)
+    specs = make_worker_specs("qwen2-7b", 2, smoke=True, slots=2,
+                              max_len=64)
+    ctl = make_cluster(specs, q, transport="loopback", router="round_robin",
+                       bandwidth=1e30)
+    ctl.run()
+    assert len(q.completed) == 4
+    assert all(v.status.cost_source == "analytic"
+               for v in ctl.views_in_order())

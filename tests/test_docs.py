@@ -1,0 +1,46 @@
+"""Docs stay navigable: the link checker passes, and actually checks.
+
+Runs ``tools/check_docs.py`` over this checkout in tier-1 so a dead
+relative link in README.md / docs/ / the subsystem READMEs fails locally
+before it fails the CI ``docs`` job — plus a negative case pinning that
+the checker really reports dead links (a checker that silently passes
+everything would defeat the job)."""
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_repo_docs_have_no_dead_links(capsys):
+    assert check_docs.main(["--root", str(ROOT)]) == 0, \
+        capsys.readouterr().out
+
+
+def test_checker_reports_dead_links(tmp_path):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "real.md").write_text("target\n")
+    (tmp_path / "README.md").write_text(
+        "[ok](real.md) [also ok](https://example.com) "
+        "[anchored ok](real.md#sec)\n"
+        "[dead](missing.md) ![dead img](img/nope.png)\n")
+    (tmp_path / "docs" / "guide.md").write_text(
+        "[up-ok](../real.md)\n[up-dead](../gone.md)\n")
+    files = check_docs.doc_files(tmp_path)
+    assert [p.name for p in files] == ["README.md", "guide.md"]
+    bad_readme = check_docs.dead_links(tmp_path / "README.md", tmp_path)
+    assert [t for _, t, _ in bad_readme] == ["missing.md", "img/nope.png"]
+    bad_guide = check_docs.dead_links(tmp_path / "docs" / "guide.md",
+                                      tmp_path)
+    assert [t for _, t, _ in bad_guide] == ["../gone.md"]
+    assert check_docs.main(["--root", str(tmp_path)]) == 1
+
+
+def test_checker_flags_links_escaping_the_repo(tmp_path):
+    (tmp_path / "README.md").write_text("[esc](../somewhere.md)\n")
+    # the parent dir exists, so the link "resolves" — but outside the repo
+    (tmp_path.parent / "somewhere.md").write_text("x\n")
+    bad = check_docs.dead_links(tmp_path / "README.md", tmp_path)
+    assert len(bad) == 1 and "escapes" in bad[0][2]

@@ -1,0 +1,89 @@
+"""Docs link/reference checker: dead relative paths in markdown fail.
+
+Scans the repo's navigational docs — ``README.md``, everything under
+``docs/``, and the per-subsystem READMEs under ``src/`` — for markdown
+links/images ``[text](target)`` and verifies that every *relative* target
+resolves to an existing file or directory (anchors and ``http(s)``/
+``mailto`` targets are skipped; an anchor suffix on a relative link is
+stripped before the existence check).
+
+Run from anywhere; exits non-zero listing every dead link:
+
+  python tools/check_docs.py            # check the repo the file lives in
+  python tools/check_docs.py --root X   # check another checkout
+
+CI runs this in the ``docs`` job; ``tests/test_docs.py`` runs it in
+tier-1 so a dead link fails locally before it fails CI.
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+from typing import List, Tuple
+
+# [text](target) and ![alt](target); target ends at whitespace or ')'
+# (an optional "title" after the target is tolerated and ignored)
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+# navigational docs: the top-level README, the docs tree, and every
+# in-tree subsystem README (generated/reference dumps like PAPERS.md or
+# SNIPPETS.md carry external artifacts and are intentionally out of scope)
+DOC_GLOBS = ("README.md", "docs/**/*.md", "src/**/README.md")
+
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def doc_files(root: Path) -> List[Path]:
+    out: List[Path] = []
+    for pat in DOC_GLOBS:
+        out.extend(sorted(root.glob(pat)))
+    return [p for p in out if "__pycache__" not in p.parts]
+
+
+def dead_links(md: Path, root: Path) -> List[Tuple[int, str, str]]:
+    """(line_no, target, reason) for every unresolvable relative link."""
+    bad = []
+    for i, line in enumerate(md.read_text().splitlines(), 1):
+        for m in _LINK.finditer(line):
+            target = m.group(1)
+            if target.startswith(_SKIP_PREFIXES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            base = root if rel.startswith("/") else md.parent
+            path = (base / rel.lstrip("/")).resolve()
+            if not path.exists():
+                bad.append((i, target, f"resolves to {path}"))
+            elif root.resolve() not in path.parents \
+                    and path != root.resolve():
+                bad.append((i, target, "escapes the repository"))
+    return bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", type=Path,
+                    default=Path(__file__).resolve().parent.parent,
+                    help="repository root to scan (default: this checkout)")
+    args = ap.parse_args(argv)
+    root = args.root.resolve()
+    files = doc_files(root)
+    if not files:
+        print(f"check_docs: no markdown docs found under {root}",
+              file=sys.stderr)
+        return 1
+    n_bad = 0
+    for md in files:
+        for line_no, target, reason in dead_links(md, root):
+            n_bad += 1
+            print(f"DEAD  {md.relative_to(root)}:{line_no}: ({target}) "
+                  f"— {reason}")
+    print(f"# checked {len(files)} doc file(s): {n_bad} dead link(s)")
+    return 1 if n_bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
