@@ -29,6 +29,7 @@ def main() -> None:
         (serving_shaping.run_clock_gap, ()),  # event-vs-lockstep clock axis
         (serving_shaping.run_cost_model_gap, ()),  # measured-vs-analytic
         (serving_shaping.run_cluster, ()),   # multiprocess cluster dispatch
+        (serving_shaping.run_pd, ()),        # prefill/decode disaggregation
         (roofline_report.run, ()),
     ]:
         name = f"{fn.__module__}.{fn.__name__}"

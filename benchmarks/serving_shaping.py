@@ -389,6 +389,102 @@ def run_cluster(arch: str = "qwen2-7b", smoke: bool = True,
             "failovers": ctl.n_failovers})
 
 
+def run_pd(arch: str = "qwen2-7b", smoke: bool = True,
+           n_requests: int = 48, total_slots: int = 16,
+           prompt_len: int = 32, gen: int = 16,
+           transport: str = "loopback"):
+    """The prefill/decode disaggregation scenario: a mixed load (half
+    long-prompt/short-decode, half short-prompt/long-decode) served by
+    co-located P=4 continuous batching under the demand-shaping router
+    versus a disaggregated 2-prefill + 2-decode fleet (``PdRouter``) with
+    the same worker count and the same total slot budget, skewed toward
+    the decode pool (its phase holds a slot for ~gen steps while a
+    prefill slot clears in one wave).
+
+    Co-located continuous batching interleaves slot-refill prefills into
+    decode ticks — the per-worker phase serialization that stretches
+    active requests' TPOT and spikes the demand overlay.  The PD fleet
+    never mixes phases on a worker, so it must win on all three shaping
+    observables at once: trimmed bw-demand std, TTFT p95, AND TPOT p95
+    (asserted — this is the acceptance gate for the PD subsystem).  The
+    handoff transfers ride the same contention clock, so their bytes are
+    inside the PD cells' demand overlay, not hidden."""
+    from repro.serving import make_cluster
+    from repro.serving.cluster.worker import WorkerSpec
+    from repro.serving.pd import PdRouter
+
+    cfg = get_config(arch, smoke=smoke)
+    bw = phase_balanced_bandwidth(cfg, total_slots=total_slots,
+                                  prompt_len=prompt_len, gen=gen)
+    trim = 1.5 * _wave_time(cfg, partitions=4, total_slots=total_slots,
+                            prompt_len=prompt_len, gen=gen)
+    P = 4
+    max_len = 2 * prompt_len + 8 * gen
+    per = max(total_slots // P, 1)
+    # same total slot budget, pool-shaped: decode pool gets 3/4 of it
+    pd_slots = {0: max(per // 2, 1), 1: max(per // 2, 1),
+                2: per + per // 2, 3: per + per // 2}
+
+    def submit_mixed(queue):
+        rng = np.random.default_rng(0)
+        for i in range(n_requests):
+            if i % 2 == 0:
+                plen, g = 2 * prompt_len, max(gen // 4, 2)
+            else:
+                plen, g = max(prompt_len // 4, 4), 2 * gen
+            queue.submit(rng.integers(1, cfg.vocab, size=(plen,))
+                         .astype(np.int32), g)
+
+    results = {}
+    for label, router, slots_of in (
+            ("demand", "shaping", {w: per for w in range(P)}),
+            ("pd", PdRouter((2, 2)), pd_slots)):
+        queue = RequestQueue()
+        submit_mixed(queue)
+        specs = [WorkerSpec(wid=w, arch=arch, smoke=smoke,
+                            slots=slots_of[w], max_len=max_len,
+                            peak_flops=hw.TPU_PEAK_FLOPS / P,
+                            partitions=P)
+                 for w in range(P)]
+        t0 = time.perf_counter()
+        ctl = make_cluster(specs, queue, transport=transport, router=router,
+                           bandwidth=bw)
+        m = ctl.run()
+        us = (time.perf_counter() - t0) * 1e6
+        assert len(queue.completed) == n_requests, \
+            f"pd cell {label} served {len(queue.completed)}/{n_requests}"
+        s = m.summary()
+        std = m.bw_stats(trim=trim)[1]
+        results[label] = (std, s["ttft_p95"], s["tpot_p95"], m, us, ctl)
+
+    std_rel = results["pd"][0] / max(results["demand"][0], 1e-15)
+    ttft_rel = results["pd"][1] / max(results["demand"][1], 1e-15)
+    tpot_rel = results["pd"][2] / max(results["demand"][2], 1e-15)
+    assert std_rel < 1 and ttft_rel < 1 and tpot_rel < 1, \
+        (f"PD must beat co-located demand on every shaping observable: "
+         f"std x{std_rel:.3f} ttft_p95 x{ttft_rel:.3f} "
+         f"tpot_p95 x{tpot_rel:.3f}")
+    for label in ("demand", "pd"):
+        std, ttft95, tpot95, m, us, ctl = results[label]
+        pool = "P4" if label == "demand" else "P2+2"
+        name = f"serving_pd.{cfg.name}.{pool}.{label}.{transport}"
+        extra = {"bw_std_trimmed": std}
+        derived = f"bw_std_trimmed={std / 1e9:.3f}GBps"
+        if label == "pd":
+            r = ctl.router
+            extra.update({
+                "std_rel_vs_demand": std_rel,
+                "ttft_p95_rel_vs_demand": ttft_rel,
+                "tpot_p95_rel_vs_demand": tpot_rel,
+                "handoffs": r.n_handoffs, "deferrals": r.n_deferrals,
+                "failovers": ctl.n_failovers})
+            derived += (f";std_rel={std_rel:.3f};ttft_rel={ttft_rel:.3f};"
+                        f"tpot_rel={tpot_rel:.3f};"
+                        f"handoffs={r.n_handoffs}")
+        record(name, us, derived)
+        _note(name, m, extra)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-7b")
@@ -426,6 +522,9 @@ def main(argv=None):
         run_cluster(args.arch, smoke=args.smoke, n_requests=n_req,
                     total_slots=args.slots, prompt_len=args.prompt_len,
                     gen=args.gen, transport=args.cluster_transport)
+        run_pd(args.arch, smoke=args.smoke, n_requests=n_req,
+               total_slots=args.slots, prompt_len=args.prompt_len,
+               gen=args.gen)
     out = write_bench_json(args.json)
     print(f"# wrote {out} ({len(SCENARIOS)} scenarios)")
 

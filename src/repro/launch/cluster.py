@@ -41,7 +41,14 @@ def build_cluster_args(ap: argparse.ArgumentParser) -> None:
                     help="request routing + prefill-grant policy: "
                          "round_robin (phase-aligned baseline), "
                          "shortest_backlog (join-shortest-backlog), "
-                         "shaping (demand-aware cluster-wide stagger)")
+                         "shaping (demand-aware cluster-wide stagger), "
+                         "pd (prefill/decode disaggregation with KV-page "
+                         "handoff; see --pd-split)")
+    ap.add_argument("--pd-split", default=None, metavar="N:M",
+                    help="with --router pd: pin N prefill workers and M "
+                         "decode workers (N+M must equal the worker "
+                         "count); default is an auto-rebalancing even "
+                         "split")
     ap.add_argument("--transport", default="mp", choices=list(TRANSPORTS),
                     help="worker transport: 'mp' spawns one OS process per "
                          "worker; 'loopback' runs the same protocol "
@@ -66,13 +73,39 @@ def build_cluster_args(ap: argparse.ArgumentParser) -> None:
                          "file does not exist yet")
 
 
+def validate_cluster_args(ap: argparse.ArgumentParser, args) -> None:
+    """Parse-time validation of the shared cluster axis (both CLIs call
+    this so a bad flag dies with ``ap.error`` instead of a downstream
+    stack trace).  Rewrites ``args.pd_split`` from "N:M" to a tuple."""
+    if args.heartbeat_timeout <= 0:
+        ap.error(f"--heartbeat-timeout must be > 0 wall seconds (got "
+                 f"{args.heartbeat_timeout}); a non-positive timeout "
+                 "would declare every worker dead at its first recv")
+    if args.profile is not None and args.cost_model != "measured":
+        ap.error("--profile only applies to --cost-model measured; the "
+                 "analytic model never reads a profile")
+    if args.pd_split is not None:
+        if args.router != "pd":
+            ap.error(f"--pd-split only applies to --router pd "
+                     f"(got --router {args.router})")
+        try:
+            n_pre, n_dec = (int(s) for s in args.pd_split.split(":"))
+        except ValueError:
+            ap.error(f"--pd-split must be N:M (two integers, got "
+                     f"{args.pd_split!r})")
+        if n_pre < 1 or n_dec < 1:
+            ap.error(f"--pd-split needs at least one worker per pool "
+                     f"(got {args.pd_split})")
+        args.pd_split = (n_pre, n_dec)
+
+
 def run_cluster(*, arch: str, smoke: bool, workers: int, slots: int,
                 prompt_len: int, gen: int, n_requests: int, router: str,
                 transport: str, simulated: bool, block_size: int = 16,
                 dense: bool = False, heartbeat_timeout: float = 60.0,
                 max_queue=None, deadline=None, seed: int = 0,
                 quiet: bool = False, cost_model: str = "analytic",
-                profile=None):
+                profile=None, pd_split=None):
     """Build the request load + worker fleet, run it, print the summary.
     Returns (controller, metrics)."""
     if profile is not None and cost_model != "measured":
@@ -95,6 +128,19 @@ def run_cluster(*, arch: str, smoke: bool, workers: int, slots: int,
             "--simulated --cost-model measured needs --profile PATH: a "
             "simulated engine has no device to time, so measured pricing "
             "is replay-only (calibrate with serve.py first)")
+    if pd_split is not None:
+        if router != "pd":
+            raise ValueError(f"pd_split={pd_split} only applies to "
+                             f"router='pd' (got {router!r})")
+        if sum(pd_split) != workers:
+            raise ValueError(
+                f"pd split {pd_split[0]}:{pd_split[1]} does not cover the "
+                f"{workers}-worker fleet")
+    if router == "pd":
+        from repro.serving.pd import PdRouter
+        router_arg = PdRouter(split=pd_split)
+    else:
+        router_arg = router
     cfg = get_config(arch, smoke=smoke)
     peak_per_worker = hw.TPU_PEAK_FLOPS / workers
     max_len = prompt_len + 4 * gen + (cfg.n_meta_tokens or 0) + \
@@ -120,13 +166,20 @@ def run_cluster(*, arch: str, smoke: bool, workers: int, slots: int,
         paged=False if dense else None, seed=seed,
         cost_model=cost_model,
         profile=str(profile) if profile is not None else None)
-    ctl = make_cluster(specs, queue, transport=transport, router=router,
+    ctl = make_cluster(specs, queue, transport=transport, router=router_arg,
                        bandwidth=bandwidth,
                        heartbeat_timeout=heartbeat_timeout)
     m = ctl.run()
     if not quiet:
         s = m.summary()
-        print(f"cluster: {cfg.name} workers={workers} router={router} "
+        pd_note = ""
+        if router == "pd":
+            r = ctl.router
+            n_pre = sum(1 for p in r.pool_of.values() if p == "prefill")
+            pd_note = (f" split={n_pre}:{len(r.pool_of) - n_pre} "
+                       f"handoffs={r.n_handoffs} deferrals={r.n_deferrals}")
+        print(f"cluster: {cfg.name} workers={workers} router={router}"
+              f"{pd_note} "
               f"transport={transport} slots={workers}x{slots} "
               f"cost_model={cost_model} "
               f"completed={s['requests_completed']}/{queue.n_submitted} "
@@ -173,9 +226,10 @@ def main(argv=None):
         ap.error(f"--batch must be >= 1 (got {args.batch})")
     if args.requests < 1:
         ap.error(f"--requests must be >= 1 (got {args.requests})")
-    if args.profile is not None and args.cost_model != "measured":
-        ap.error("--profile only applies to --cost-model measured; the "
-                 "analytic model never reads a profile")
+    validate_cluster_args(ap, args)
+    if args.pd_split is not None and sum(args.pd_split) != args.workers:
+        ap.error(f"--pd-split {args.pd_split[0]}:{args.pd_split[1]} does "
+                 f"not cover the {args.workers}-worker fleet")
     run_cluster(arch=args.arch, smoke=args.smoke, workers=args.workers,
                 slots=args.batch, prompt_len=args.prompt_len, gen=args.gen,
                 n_requests=args.requests, router=args.router,
@@ -183,7 +237,8 @@ def main(argv=None):
                 block_size=args.block_size, dense=args.dense,
                 heartbeat_timeout=args.heartbeat_timeout,
                 max_queue=args.max_queue, deadline=args.deadline,
-                cost_model=args.cost_model, profile=args.profile)
+                cost_model=args.cost_model, profile=args.profile,
+                pd_split=args.pd_split)
 
 
 if __name__ == "__main__":

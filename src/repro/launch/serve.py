@@ -95,9 +95,15 @@ def main(argv=None):
         ap.error(f"--requests must be >= 1 (got {args.requests})")
     if args.cluster is not None and args.cluster < 1:
         ap.error(f"--cluster must be >= 1 (got {args.cluster})")
-    if args.profile is not None and args.cost_model != "measured":
-        ap.error("--profile only applies to --cost-model measured; the "
-                 "analytic model never reads or writes a profile")
+    from repro.launch.cluster import validate_cluster_args
+    validate_cluster_args(ap, args)
+    if args.cluster is None and args.router == "pd":
+        ap.error("--router pd needs --cluster N: prefill/decode "
+                 "disaggregation routes between cluster workers")
+    if args.pd_split is not None and args.cluster is not None \
+            and sum(args.pd_split) != args.cluster:
+        ap.error(f"--pd-split {args.pd_split[0]}:{args.pd_split[1]} does "
+                 f"not cover the {args.cluster}-worker fleet")
 
     if args.cluster is not None:
         # controller + N worker-process cluster (repro.launch.cluster).
@@ -122,7 +128,8 @@ def main(argv=None):
             block_size=args.block_size, dense=args.dense,
             heartbeat_timeout=args.heartbeat_timeout,
             max_queue=args.max_queue, deadline=args.deadline,
-            cost_model=args.cost_model, profile=args.profile)
+            cost_model=args.cost_model, profile=args.profile,
+            pd_split=args.pd_split)
         return [r.tokens for r in ctl.queue.completed]
 
     cfg = get_config(args.arch, smoke=args.smoke)

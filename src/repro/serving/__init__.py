@@ -26,6 +26,7 @@ from repro.serving.engine import (EngineBase, PartitionEngine, PendingOp,
                                   prefill_cost, prefill_cost_ragged)
 from repro.serving.kv_pool import BlockPool, PoolExhausted
 from repro.serving.metrics import ServingMetrics
+from repro.serving.pd import PdRouter
 from repro.serving.queue import Request, RequestQueue
 from repro.serving.scheduler import (CLOCKS, POLICIES, EventScheduler,
                                      PhaseStaggeredScheduler, SpanRecord,
@@ -37,7 +38,8 @@ __all__ = [
     "make_worker_specs",
     "EngineBase", "PartitionEngine", "PendingOp", "PhaseCost",
     "SimulatedEngine", "decode_cost", "prefill_cost", "prefill_cost_ragged",
-    "BlockPool", "PoolExhausted", "ServingMetrics", "Request", "RequestQueue",
+    "BlockPool", "PdRouter", "PoolExhausted", "ServingMetrics", "Request",
+    "RequestQueue",
     "CLOCKS", "POLICIES", "EventScheduler", "PhaseStaggeredScheduler",
     "SpanRecord", "TickRecord", "make_scheduler", "serving_tasklists",
     "serving_trace_report",

@@ -12,8 +12,10 @@ The in-process fleet turned into a controller + N partition-worker cluster:
     ``SimulatedEngine`` to the protocol; real engines pin themselves to a
     ``launch.mesh.make_partition_submesh`` group when devices allow;
   * ``controller``— the ``RequestQueue`` + routing policies (round_robin /
-    shortest_backlog / shaping) + heartbeat-timeout failover, driving the
-    shared ``core.timeline`` contention clock.
+    shortest_backlog / shaping / pd) + heartbeat-timeout failover,
+    driving the shared ``core.timeline`` contention clock.  The ``pd``
+    router (``repro.serving.pd``) disaggregates the fleet into prefill
+    and decode pools with KV-page handoff between them.
 
 ``make_cluster`` is the one-call assembly used by the CLI, the benchmarks,
 and the tests.

@@ -30,6 +30,21 @@ Routing policies (the pluggable placement + prefill-grant rule):
                      at most one prefill in flight — prefill bursts stay
                      staggered across the whole cluster.  Loopback shaping
                      == EventScheduler policy='demand' exactly.
+  pd               — prefill/decode disaggregation
+                     (``repro.serving.pd.PdRouter``): the fleet splits
+                     into a prefill pool and a decode pool, completed
+                     prefills migrate between them as ``KvHandoff``
+                     payloads priced on the shared contention clock, and
+                     phases overlap by construction instead of by
+                     stagger.  See ``docs/pd_disaggregation.md``.
+
+Routers may additionally implement three optional hooks the controller
+calls with ``getattr`` fallbacks (so pre-existing custom routers keep
+working): ``decode_candidates(ctl)`` restricts which views get the
+otherwise never-gated decode issue; ``unserved(ctl)`` counts requests the
+router holds in limbo (e.g. a KV handoff on the wire) so ``run()`` does
+not mistake them for a drained cluster; ``on_worker_died(ctl, view,
+now)`` observes failovers.
 
 Failure handling: a worker that crashes (pipe EOF), hangs past the
 transport's heartbeat timeout, or is ``kill()``-ed mid-run is marked dead
@@ -168,10 +183,18 @@ class ShapingRouter(RoundRobinRouter):
         return False
 
 
+def _pd_router():
+    # lazy: repro.serving.pd imports the protocol module, which imports
+    # the engine — resolving it here keeps the module graph acyclic
+    from repro.serving.pd.router import PdRouter
+    return PdRouter()
+
+
 ROUTERS = {
     "round_robin": RoundRobinRouter,
     "shortest_backlog": ShortestBacklogRouter,
     "shaping": ShapingRouter,
+    "pd": _pd_router,
 }
 
 
@@ -344,6 +367,9 @@ class ClusterController:
             r.t_first_token = None
             r.t_done = None
         self.queue.requeue(reqs)
+        on_died = getattr(self.router, "on_worker_died", None)
+        if on_died is not None:
+            on_died(self, v, now)
         self.pump(now)
 
     def heartbeat(self, t_wall: Optional[float] = None) -> Dict[int, bool]:
@@ -374,7 +400,10 @@ class ClusterController:
 
     def _pump_once(self, now: float) -> None:
         self.router.place(self, now)
-        for v in self.views_in_order():  # decode is never policy-gated
+        decode_candidates = getattr(self.router, "decode_candidates", None)
+        pool = decode_candidates(self) if decode_candidates is not None \
+            else self.views_in_order()
+        for v in pool:  # decode is never policy-gated within its pool
             if v.alive and v.span is None and v.status.busy:
                 self.issue(v, "decode", now)
         cand = [v for v in self.views_in_order()
@@ -384,8 +413,10 @@ class ClusterController:
 
     # -- drive ---------------------------------------------------------------
     def _unserved(self) -> int:
+        limbo = getattr(self.router, "unserved", None)
         return len(self.queue) + sum(len(v.outstanding)
-                                     for v in self.views.values())
+                                     for v in self.views.values()) \
+            + (limbo(self) if limbo is not None else 0)
 
     def run(self, max_events: Optional[int] = None) -> ServingMetrics:
         """Drive until the queue and every worker drain; failover stalls

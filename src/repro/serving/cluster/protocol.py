@@ -110,7 +110,9 @@ class WorkerStatus:
     is empty.  ``cost_source`` names that pricing source ("analytic" |
     "measured"): with a ``MeasuredCostModel`` the spacing ingredients are
     the worker's on-device timings, and the controller mirror stays
-    consistent with them without ever re-pricing controller-side."""
+    consistent with them without ever re-pricing controller-side.
+    ``active_rids`` lists the requests currently seated in slots — the PD
+    router migrates exactly these off a prefill-pool worker."""
     busy: bool
     wants_prefill: bool
     backlog_len: int
@@ -119,6 +121,58 @@ class WorkerStatus:
     pre_dur: float = 0.0
     wave_dur: float = 0.0
     cost_source: str = "analytic"
+    active_rids: Tuple[int, ...] = ()
+
+
+@dataclass(frozen=True)
+class PageArray:
+    """One named device array of a handoff payload, flattened to raw
+    bytes (``np.ndarray.tobytes`` row-major) + dtype/shape for exact
+    reconstruction.  bfloat16 round-trips via the ``ml_dtypes`` numpy
+    registration that ships with jax."""
+    name: str
+    dtype: str
+    shape: Tuple[int, ...]
+    data: bytes
+
+
+def pack_array(name: str, arr) -> PageArray:
+    a = np.asarray(arr)
+    return PageArray(name=name, dtype=str(a.dtype),
+                     shape=tuple(int(s) for s in a.shape),
+                     data=a.tobytes())
+
+
+def unpack_array(pa: PageArray) -> np.ndarray:
+    try:
+        dt = np.dtype(pa.dtype)
+    except TypeError:
+        import ml_dtypes  # noqa: F401 — registers bfloat16 et al.
+        dt = np.dtype(pa.dtype)
+    a = np.frombuffer(pa.data, dtype=dt)
+    return a.reshape(pa.shape).copy()  # copy: frombuffer views are read-only
+
+
+@dataclass(frozen=True)
+class KvHandoff:
+    """A prefilled request's complete KV state, leaving a prefill worker.
+
+    ``len`` is the slot's context length (cache write position, prefix
+    included) at export; ``kv_bytes`` the modeled size of the transfer —
+    the per-slot cache bytes a decode step streams, priced by the source
+    worker's own cost model so the controller's handoff span competes on
+    the contention timeline in the same units as compute traffic.
+    ``pages`` carries the gathered device arrays (paged: the block rows of
+    the slot's table, in table order; dense: the slot's cache rows); a
+    ``SimulatedEngine`` ships an empty tuple.  ``tokens`` /
+    ``t_first_token`` are the generation progress that must survive the
+    move (the first-token stamp keeps TTFT billed where prefill ran)."""
+    request: WireRequest
+    tokens: Tuple[int, ...]
+    t_first_token: Optional[float]
+    len: int
+    kv_bytes: float
+    pages: Tuple[PageArray, ...]
 
 
 # ---------------------------------------------------------------------------
@@ -143,6 +197,23 @@ class IssueOp:
 class CommitOp:
     """Commit the one outstanding issued op at the clock-chosen instant."""
     t_end: float
+
+
+@dataclass(frozen=True)
+class ExportKv:
+    """Export the named active requests' KV state (PD handoff source
+    side): each request leaves the engine, its slot and blocks are freed,
+    and its state comes back as a ``KvHandoff`` payload."""
+    rids: Tuple[int, ...]
+
+
+@dataclass(frozen=True)
+class ImportKv:
+    """Seat a handed-off request in a free slot with its KV state
+    restored (PD handoff destination side).  All-or-nothing: a worker
+    without a free slot or enough pool blocks replies ``ok=False`` and
+    mutates nothing (the controller defers and retries)."""
+    handoff: KvHandoff
 
 
 @dataclass(frozen=True)
@@ -194,6 +265,25 @@ class OpCommitted:
 
 
 @dataclass(frozen=True)
+class KvExported:
+    """Reply to ``ExportKv``: one handoff per requested rid, in request
+    order.  The slots are already free on the worker — it can start its
+    next prefill wave while the payloads are still in flight."""
+    handoffs: Tuple[KvHandoff, ...]
+    status: WorkerStatus
+
+
+@dataclass(frozen=True)
+class KvImported:
+    """Reply to ``ImportKv``.  ``ok=False`` is the ``PoolExhausted``
+    deferral path (capacity, not failure — the controller retries);
+    engine errors still surface as ``WorkerError``."""
+    ok: bool
+    reason: str
+    status: WorkerStatus
+
+
+@dataclass(frozen=True)
 class Pong:
     t_wall: float
     status: WorkerStatus
@@ -219,8 +309,9 @@ class WorkerError:
 # ---------------------------------------------------------------------------
 
 _MESSAGES: Tuple[Type, ...] = (
-    Assign, IssueOp, CommitOp, Ping, Shutdown,
-    Hello, AssignAck, OpIssued, OpCommitted, Pong, Bye, WorkerError,
+    Assign, IssueOp, CommitOp, ExportKv, ImportKv, Ping, Shutdown,
+    Hello, AssignAck, OpIssued, OpCommitted, KvExported, KvImported,
+    Pong, Bye, WorkerError,
 )
 _KIND_OF: Dict[Type, str] = {cls: cls.__name__ for cls in _MESSAGES}
 _BY_KIND: Dict[str, Type] = {v: k for k, v in _KIND_OF.items()}
@@ -228,12 +319,20 @@ _BY_KIND: Dict[str, Type] = {v: k for k, v in _KIND_OF.items()}
 # nested dataclass fields, per message type (tuples mean "tuple of")
 _NESTED = {
     Assign: {"requests": (WireRequest,)},
+    ImportKv: {"handoff": KvHandoff},
     Hello: {"status": WorkerStatus},
     AssignAck: {"status": WorkerStatus},
     OpIssued: {"cost": WireCost, "status": WorkerStatus},
     OpCommitted: {"retired": (RetiredRequest,), "refill": WireCost,
                   "status": WorkerStatus},
+    KvExported: {"handoffs": (KvHandoff,), "status": WorkerStatus},
+    KvImported: {"status": WorkerStatus},
     Pong: {"status": WorkerStatus},
+}
+
+# message-level plain-tuple fields that asdict flattens to lists
+_TUPLE_FIELDS = {
+    ExportKv: ("rids",),
 }
 
 
@@ -256,6 +355,8 @@ def decode(d: dict):
             d[name] = tuple(_build(spec[0], item) for item in val)
         else:
             d[name] = _build(spec, val)
+    for name in _TUPLE_FIELDS.get(cls, ()):
+        d[name] = tuple(d[name])
     return cls(**d)
 
 
@@ -266,4 +367,14 @@ def _build(cls, val):
         val = dict(val, prompt=tuple(val["prompt"]))
     if cls is RetiredRequest:
         val = dict(val, tokens=tuple(val["tokens"]))
+    if cls is WorkerStatus:
+        val = dict(val, active_rids=tuple(val.get("active_rids", ())))
+    if cls is PageArray:
+        val = dict(val, shape=tuple(val["shape"]))
+    if cls is KvHandoff:
+        val = dict(val,
+                   request=_build(WireRequest, val["request"]),
+                   tokens=tuple(val["tokens"]),
+                   pages=tuple(_build(PageArray, p)
+                               for p in val["pages"]))
     return cls(**val)

@@ -54,7 +54,8 @@ class WorkerRuntime:
             backlog_len=len(e.backlog),
             n_active=sum(1 for r in e.active if r is not None),
             head_arrival=head_arrival, pre_dur=pre_dur, wave_dur=wave_dur,
-            cost_source=e.cost_model.kind)
+            cost_source=e.cost_model.kind,
+            active_rids=tuple(r.rid for r in e.active if r is not None))
 
     def hello(self) -> P.Hello:
         return P.Hello(wid=self.engine.pid, slots=self.engine.slots,
@@ -95,6 +96,22 @@ class WorkerRuntime:
             refill = P.WireCost.from_cost(extra) if extra is not None else None
             return P.OpCommitted(op=pend.kind, retired=retired,
                                  refill=refill, status=self.status())
+        if isinstance(msg, P.ExportKv):
+            from repro.serving.pd import handoff as H
+            handoffs = tuple(H.export_handoff(self.engine, rid)
+                             for rid in msg.rids)
+            return P.KvExported(handoffs=handoffs, status=self.status())
+        if isinstance(msg, P.ImportKv):
+            from repro.serving.kv_pool import PoolExhausted
+            from repro.serving.pd import handoff as H
+            try:
+                H.apply_handoff(self.engine, msg.handoff)
+            except PoolExhausted as e:
+                # capacity, not failure: all-or-nothing import left the
+                # engine untouched; the controller defers and retries
+                return P.KvImported(ok=False, reason=str(e),
+                                    status=self.status())
+            return P.KvImported(ok=True, reason="", status=self.status())
         if isinstance(msg, P.Ping):
             return P.Pong(t_wall=msg.t_wall, status=self.status())
         if isinstance(msg, P.Shutdown):

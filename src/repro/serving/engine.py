@@ -146,6 +146,8 @@ class EngineBase:
         self.n_prefills = 0
         self.n_refills = 0
         self.n_decode_steps = 0
+        self.n_exports = 0
+        self.n_imports = 0
         self.completed: List[Request] = []
         self._prefix = (getattr(cfg, "n_meta_tokens", 0) or 0) + \
                        (getattr(cfg, "n_img_tokens", 0) or 0)
@@ -169,6 +171,75 @@ class EngineBase:
     def _ctx_budget(self, req: Request) -> int:
         """Cache positions this request needs end-to-end."""
         return self._prefix + req.prompt_len + req.max_new_tokens
+
+    # -- KV handoff (prefill/decode disaggregation) --------------------------
+    def export_kv(self, rid: int):
+        """Remove active request ``rid`` from this engine, returning
+        ``(request, state)`` — the request object plus everything a peer
+        engine needs to continue decoding it: ``state['len']`` is the
+        slot's context length, ``state['kv_bytes']`` the modeled transfer
+        size (the per-slot cache bytes one decode step streams, in this
+        engine's cost-model dtype), ``state['pages']`` the device arrays
+        gathered by ``_export_slot_state`` (empty for the simulated
+        engine).  The slot and its blocks are freed immediately — the
+        prefill-pool worker can start its next wave while the payload is
+        still in flight."""
+        from repro.core.traffic import decode_kv_bytes
+
+        for i, req in enumerate(self.active):
+            if req is not None and req.rid == rid:
+                break
+        else:
+            raise KeyError(f"request {rid} is not active on engine "
+                           f"{self.pid}")
+        dtype_bytes = int(getattr(self.cost_model, "dtype_bytes", 2))
+        state = {
+            "len": int(self.slot_lens[i]),
+            "kv_bytes": float(decode_kv_bytes(self.cfg, self.slot_lens[i],
+                                              dtype_bytes)),
+            "pages": self._export_slot_state(i),
+        }
+        self.active[i] = None
+        self.pool.free(self.slot_tables[i])
+        self.slot_tables[i] = []
+        self.slot_lens[i] = 0
+        self.n_exports += 1
+        return req, state
+
+    def import_kv(self, req: Request, state: dict) -> int:
+        """Seat a handed-off request in a free slot and restore its KV
+        state; returns the slot index.  All-or-nothing: every capacity
+        check runs BEFORE any state mutates, so a ``PoolExhausted`` (no
+        free slot, or not enough blocks for the request's full context
+        budget) leaves the engine untouched and the caller free to defer
+        the import to another worker or a later time."""
+        free = [i for i, r in enumerate(self.active) if r is None]
+        if not free:
+            raise PoolExhausted(
+                f"engine {self.pid}: no free slot for imported request "
+                f"{req.rid} ({self.slots} slots active)")
+        need = self._ctx_budget(req)
+        if need > self.max_len:
+            raise ValueError(
+                f"request {req.rid} needs {need} cache positions > "
+                f"per-slot budget max_len={self.max_len}")
+        if int(state["len"]) > need:
+            raise ValueError(
+                f"request {req.rid} imports len={state['len']} beyond its "
+                f"context budget {need}")
+        if not self.pool.can_fit(need):
+            raise PoolExhausted(
+                f"engine {self.pid}: request {req.rid} needs "
+                f"{self.pool.blocks_for(need)} blocks; pool has "
+                f"{self.pool.n_free} of {self.pool.n_blocks}")
+        i = free[0]
+        self.slot_tables[i] = self.pool.alloc_for_tokens(need)
+        self.active[i] = req
+        self.slot_lens[i] = int(state["len"])
+        self.assign_order.append(req.rid)
+        self._import_slot_state(i, state.get("pages") or {}, req)
+        self.n_imports += 1
+        return i
 
     # -- cost estimates (used by the demand policy) --------------------------
     def prefill_cost_est(self) -> PhaseCost:
@@ -367,6 +438,17 @@ class EngineBase:
         allocated).  Returns the request's first token, or None."""
         raise NotImplementedError
 
+    def _export_slot_state(self, i: int) -> dict:
+        """Gather slot ``i``'s device state as host numpy arrays (keyed by
+        name).  The base engine has no device state — the simulated engine
+        hands off an empty payload and migration is pure bookkeeping."""
+        return {}
+
+    def _import_slot_state(self, i: int, pages: dict,
+                           req: Request) -> None:
+        """Install an exported payload into slot ``i`` (tables already
+        allocated, request already seated).  Base engine: nothing to do."""
+
 
 # ---------------------------------------------------------------------------
 # real engine (jax, via models.api) and the execution-free simulated engine
@@ -499,6 +581,19 @@ class PartitionEngine(EngineBase):
         logits = jnp.stack([l for l in logits_out])
         return logits, cache
 
+    def _ensure_pages(self) -> None:
+        """Lazily initialise the paged pool arrays (first prefill OR first
+        KV import on a fresh decode-pool engine)."""
+        from repro.serving import kv_pool as KV
+
+        if self.pages is None:
+            self.pages = KV.init_pages(self.cfg, self.pool.n_blocks,
+                                       self.block_size)
+            if self._has_ssm():
+                st = self.api.init_cache(self.slots, 1)
+                self.pages["ssm_state"] = st["ssm_state"]
+                self.pages["ssm_conv"] = st["ssm_conv"]
+
     def _install_paged(self, cache, rows: List[int],
                        src_rows: Optional[List[int]] = None) -> None:
         """Move batch rows ``src_rows`` (default: ``rows`` themselves) of a
@@ -509,13 +604,7 @@ class PartitionEngine(EngineBase):
 
         from repro.serving import kv_pool as KV
 
-        if self.pages is None:
-            self.pages = KV.init_pages(self.cfg, self.pool.n_blocks,
-                                       self.block_size)
-            if self._has_ssm():
-                st = self.api.init_cache(self.slots, 1)
-                self.pages["ssm_state"] = st["ssm_state"]
-                self.pages["ssm_conv"] = st["ssm_conv"]
+        self._ensure_pages()
         src = list(src_rows if src_rows is not None else rows)
         if "k" in cache:
             tables = np.zeros((len(rows), self.table_width), np.int32)
@@ -587,6 +676,73 @@ class PartitionEngine(EngineBase):
         last[i, 0] = tok
         self._last_tok = jnp.asarray(last)
         return tok
+
+    # -- KV handoff device-state movers --------------------------------------
+    def _export_slot_state(self, i: int) -> dict:
+        """Gather slot ``i``'s cache to host numpy, in table order (paged)
+        or as the slot's dense rows.  The last generated token is not
+        shipped — it is ``req.tokens[-1]`` and the importer rebuilds the
+        ``_last_tok`` row from it."""
+        if self.cfg.family == "encdec":
+            raise ValueError("KV handoff is not supported for enc-dec "
+                             "models (wave-shared decoder cache)")
+        out: dict = {}
+        if self.paged:
+            if self.pages is not None and "k_pages" in self.pages:
+                tbl = np.asarray(self.slot_tables[i], np.int32)
+                out["k"] = np.asarray(self.pages["k_pages"][:, tbl])
+                out["v"] = np.asarray(self.pages["v_pages"][:, tbl])
+            if self._has_ssm() and self.pages is not None:
+                out["ssm_state"] = np.asarray(self.pages["ssm_state"][:, i])
+                out["ssm_conv"] = np.asarray(self.pages["ssm_conv"][:, i])
+        elif self.cache is not None:
+            for key in ("k", "v", "ssm_state", "ssm_conv"):
+                if key in self.cache:
+                    out[key] = np.asarray(self.cache[key][:, i])
+        return out
+
+    def _import_slot_state(self, i: int, pages: dict,
+                           req: Request) -> None:
+        import jax.numpy as jnp
+
+        if self.cfg.family == "encdec":
+            raise ValueError("KV handoff is not supported for enc-dec "
+                             "models (wave-shared decoder cache)")
+        if not req.tokens:
+            raise ValueError(f"request {req.rid} imported before prefill "
+                             "(no generated tokens to resume from)")
+        if self.paged:
+            self._ensure_pages()
+            if "k" in pages:
+                n_blk = len(self.slot_tables[i])
+                if pages["k"].shape[1] != n_blk:
+                    raise ValueError(
+                        f"handoff carries {pages['k'].shape[1]} blocks but "
+                        f"slot {i} allocated {n_blk} (block_size mismatch "
+                        "across the fleet?)")
+                tbl = jnp.asarray(np.asarray(self.slot_tables[i], np.int32))
+                kd = self.pages["k_pages"].dtype
+                self.pages["k_pages"] = self.pages["k_pages"].at[:, tbl].set(
+                    jnp.asarray(pages["k"]).astype(kd))
+                self.pages["v_pages"] = self.pages["v_pages"].at[:, tbl].set(
+                    jnp.asarray(pages["v"]).astype(kd))
+            if self._has_ssm():
+                for key in ("ssm_state", "ssm_conv"):
+                    self.pages[key] = self.pages[key].at[:, i].set(
+                        jnp.asarray(pages[key]).astype(self.pages[key].dtype))
+        else:
+            if self.cache is None:
+                self.cache = self.api.init_cache(self.slots, self.max_len)
+            for key in ("k", "v", "ssm_state", "ssm_conv"):
+                if key in self.cache and key in pages:
+                    self.cache[key] = self.cache[key].at[:, i].set(
+                        jnp.asarray(pages[key]).astype(
+                            self.cache[key].dtype))
+        last = (np.asarray(self._last_tok).copy()
+                if self._last_tok is not None
+                else np.ones((self.slots, 1), np.int32))
+        last[i, 0] = int(req.tokens[-1])
+        self._last_tok = jnp.asarray(last, jnp.int32)
 
     # -- decode --------------------------------------------------------------
     def _device_lens(self) -> np.ndarray:

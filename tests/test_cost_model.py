@@ -365,3 +365,65 @@ def test_cluster_default_cost_source_is_analytic():
     assert len(q.completed) == 4
     assert all(v.status.cost_source == "analytic"
                for v in ctl.views_in_order())
+
+
+# ---------------------------------------------------------------------------
+# the committed reference profile: frozen, deterministic, regenerable
+# ---------------------------------------------------------------------------
+
+
+def _tools_module():
+    import importlib.util
+    from pathlib import Path
+
+    path = Path(__file__).resolve().parents[1] / "tools" / \
+        "make_reference_profile.py"
+    spec = importlib.util.spec_from_file_location("make_reference_profile",
+                                                  path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_reference_profile_replays_frozen_and_deterministic(tmp_path):
+    """The profile shipped under ``docs/profiles/`` loads as a FROZEN
+    replay model whose warm buckets carry the documented per-phase skew
+    (prefill x1.35, decode x0.8 over analytic), cold buckets fall back to
+    analytic exactly, and two loads price identically."""
+    from pathlib import Path
+
+    cfg = _cfg()
+    path = Path(__file__).resolve().parents[1] / "docs" / "profiles" / \
+        f"{cfg.name}_smoke.json"
+    assert path.exists(), "the reference profile must be committed"
+    loaded = load_profile(path, cfg)
+    assert loaded.timer is None and loaded.n_warm > 0
+    ana = loaded.analytic
+    mod = _tools_module()
+    pre = loaded.prefill(4, 32)
+    assert pre.duration == pytest.approx(
+        ana.prefill(4, 32).duration * mod.PREFILL_SKEW)
+    dec = loaded.decode([32 + 8] * 4)
+    assert dec.duration == pytest.approx(
+        ana.decode([32 + 8] * 4).duration * mod.DECODE_SKEW)
+    # bytes/FLOPs stay analytic; only the duration is measured
+    assert (pre.flops, pre.byts) == \
+        (ana.prefill(4, 32).flops, ana.prefill(4, 32).byts)
+    # a bucket outside the calibration envelope is exactly analytic
+    assert loaded.prefill(4, 999) == ana.prefill(4, 999)
+    # replay is deterministic: a second load prices identically
+    again = load_profile(path, cfg)
+    for b, plen in [(1, 32), (4, 32)]:
+        assert again.prefill(b, plen) == loaded.prefill(b, plen)
+
+
+def test_reference_profile_matches_generator_byte_for_byte(tmp_path):
+    """Regenerating with the default flags reproduces the committed file
+    exactly — the artifact cannot drift from its generator."""
+    from pathlib import Path
+
+    committed = Path(__file__).resolve().parents[1] / "docs" / \
+        "profiles" / "qwen2_7b_smoke.json"
+    out = tmp_path / "ref.json"
+    _tools_module().main(["--out", str(out)])
+    assert out.read_bytes() == committed.read_bytes()
