@@ -28,11 +28,16 @@ KEY = "tok_per_s_virtual"
 
 def compare(baseline: Dict[str, dict], candidate: Dict[str, dict], *,
             threshold: float = 0.10, key: str = KEY,
+            allow_new: Tuple[str, ...] = (),
             ) -> Tuple[List[str], List[str]]:
     """Returns (failures, notes).  A failure is a scenario whose ``key``
-    regressed by more than ``threshold`` relative to baseline, or a
-    baseline scenario missing from the candidate.  New candidate scenarios
-    are informational."""
+    regressed by more than ``threshold`` relative to baseline, a baseline
+    scenario missing from the candidate, or a candidate scenario absent
+    from the baseline whose name matches no ``allow_new`` prefix.  The
+    allowlist is how a PR lands a new scenario family: it names the new
+    prefixes explicitly, every later PR drops the flag, and from then on
+    the family is gated like any other cell — unknown new keys are a
+    failure, not a silent pass."""
     failures: List[str] = []
     notes: List[str] = []
     for name in sorted(baseline):
@@ -53,7 +58,11 @@ def compare(baseline: Dict[str, dict], candidate: Dict[str, dict], *,
         else:
             notes.append(line)
     for name in sorted(set(candidate) - set(baseline)):
-        notes.append(f"{name}: new scenario (no baseline)")
+        if any(name.startswith(p) for p in allow_new):
+            notes.append(f"{name}: new scenario (allowed by prefix)")
+        else:
+            failures.append(f"{name}: new scenario not in baseline "
+                            f"(pass --allow-new <prefix> to admit it)")
     return failures, notes
 
 
@@ -67,13 +76,19 @@ def main(argv=None) -> int:
                     help="max tolerated fractional drop (default 0.10)")
     ap.add_argument("--key", default=KEY,
                     help=f"scenario metric to gate on (default {KEY})")
+    ap.add_argument("--allow-new", action="append", default=[],
+                    metavar="PREFIX",
+                    help="admit candidate scenarios matching this name "
+                         "prefix even though the baseline lacks them "
+                         "(repeatable); any other new key is a failure")
     ap.add_argument("--quiet", action="store_true",
                     help="print failures only")
     args = ap.parse_args(argv)
     baseline = json.loads(args.baseline.read_text())
     candidate = json.loads(args.candidate.read_text())
     failures, notes = compare(baseline, candidate,
-                              threshold=args.threshold, key=args.key)
+                              threshold=args.threshold, key=args.key,
+                              allow_new=tuple(args.allow_new))
     if not args.quiet:
         for line in notes:
             print(f"  ok  {line}")

@@ -329,6 +329,123 @@ def run_cost_model_gap(arch: str = "qwen2-7b", smoke: bool = True,
             "demand_std_rel_trimmed": std_rel, **prof_extra})
 
 
+def run_prefix_cache(arch: str = "qwen2-7b", smoke: bool = True,
+                     n_requests: int = 48, total_slots: int = 16,
+                     prompt_len: int = 32, gen: int = 16):
+    """The prefix-caching scenario: a shared-system-prompt ragged load (a
+    ``share`` fraction of requests open with the same two-block system
+    prompt, the rest are fully unique; every tail is unique and ragged)
+    swept over share in {0, 0.5, 1.0}, cache on/off x none/demand, P=4
+    wave-granular on the event clock.
+
+    The cache removes the shared prefix's prefill compute, so the savings
+    are hit-rate-dependent by construction: at share=0 the cache cells are
+    a no-op control, at share>=0.5 the cache cells must beat their
+    no-cache twins on virtual throughput AND TTFT p95 (asserted), and the
+    demand policy priced from *post-hit* costs must keep shaping — its
+    trimmed bw-demand std stays below the ungated fleet's (asserted).
+    Hit/COW/eviction counters ride in each cell's ``extra`` dict, never in
+    ``ServingMetrics.summary()``."""
+    cfg = get_config(arch, smoke=smoke)
+    bw = phase_balanced_bandwidth(cfg, total_slots=total_slots,
+                                  prompt_len=prompt_len, gen=gen)
+    # system prompt = two full KV blocks, so a shared-load hit always
+    # covers whole blocks; tails keep the load ragged (paged path)
+    sys_len = 2 * 16
+    tails = [max(prompt_len // 4, 4), max(prompt_len // 2, 8),
+             max(3 * prompt_len // 4, 12)]
+    max_plen = sys_len + max(tails)
+    trim = 1.5 * _wave_time(cfg, partitions=4, total_slots=total_slots,
+                            prompt_len=max_plen, gen=gen)
+    P, slots = 4, max(total_slots // 4, 1)
+
+    def submit_load(queue, share):
+        rng = np.random.default_rng(0)
+        sys_prompt = rng.integers(1, cfg.vocab, size=(sys_len,)) \
+            .astype(np.int32)
+        for i in range(n_requests):
+            # Bresenham interleave: shared requests spread evenly through
+            # the arrival order (and hence across the round-robin fleet)
+            shared = int((i + 1) * share) > int(i * share)
+            tail = rng.integers(1, cfg.vocab,
+                                size=(tails[i % len(tails)],)) \
+                .astype(np.int32)
+            prompt = np.concatenate([sys_prompt, tail]) if shared else \
+                rng.integers(1, cfg.vocab,
+                             size=(sys_len + len(tail),)).astype(np.int32)
+            queue.submit(prompt, gen)
+
+    def cell(policy, cache, share):
+        queue = RequestQueue()
+        submit_load(queue, share)
+        engines = [SimulatedEngine(cfg, slots=slots,
+                                   max_len=max_plen + 4 * gen, pid=p,
+                                   peak_flops=hw.TPU_PEAK_FLOPS / P,
+                                   wave_only=True, prefix_cache=cache)
+                   for p in range(P)]
+        sched = make_scheduler(engines, queue, policy=policy,
+                               bandwidth=bw, clock="event")
+        t0 = time.perf_counter()
+        m = sched.run()
+        us = (time.perf_counter() - t0) * 1e6
+        assert len(queue.completed) == n_requests, \
+            f"prefix-cache cell served {len(queue.completed)}/{n_requests}"
+        counters = {
+            "prefix_hits": sum(e.n_prefix_hits for e in engines),
+            "cached_tokens": sum(e.n_cached_tokens for e in engines),
+            "cow_copies": sum(e.pool.n_cow for e in engines),
+            "evictions": sum(e.pool.n_evicted for e in engines)}
+        return m, us, counters
+
+    for share in (0.0, 0.5, 1.0):
+        cells = {(policy, cache): cell(policy, cache, share)
+                 for policy in ("none", "demand")
+                 for cache in (False, True)}
+        for policy in ("none", "demand"):
+            m_on, m_off = cells[(policy, True)][0], cells[(policy, False)][0]
+            hits = cells[(policy, True)][2]["prefix_hits"]
+            if share == 0.0:
+                assert hits == 0, \
+                    f"unique load must not hit the cache (got {hits})"
+            else:
+                # the hit-rate-dependent claims: cached prefill pricing
+                # must show up as virtual throughput AND latency wins
+                assert hits > 0, f"shared load produced no hits ({policy})"
+                assert m_on.throughput() > m_off.throughput(), \
+                    (f"cache-on lost virtual throughput at share={share} "
+                     f"({policy}): {m_on.throughput():.4g} <= "
+                     f"{m_off.throughput():.4g}")
+                p95_on = m_on.percentiles(m_on.ttft())["p95"]
+                p95_off = m_off.percentiles(m_off.ttft())["p95"]
+                assert p95_on < p95_off, \
+                    (f"cache-on lost TTFT p95 at share={share} ({policy}): "
+                     f"{p95_on:.4g} >= {p95_off:.4g}")
+        # demand priced from post-hit costs must keep shaping vs ungated
+        std_on = {p: cells[(p, True)][0].bw_stats(trim=trim)[1]
+                  for p in ("none", "demand")}
+        shaping_rel = std_on["demand"] / max(std_on["none"], 1e-15)
+        assert shaping_rel < 1.0, \
+            (f"demand stopped shaping with the cache on at share={share}: "
+             f"trimmed std ratio {shaping_rel:.3f}")
+        for (policy, cache), (m, us, counters) in cells.items():
+            tag = "cache" if cache else "nocache"
+            m_off = cells[(policy, False)][0]
+            tok_rel = m.throughput() / m_off.throughput()
+            extra = {**counters, "share": share,
+                     "tok_s_rel_vs_nocache": tok_rel,
+                     "bw_std_trimmed": m.bw_stats(trim=trim)[1]}
+            if cache and policy == "demand":
+                extra["demand_std_rel_vs_none"] = shaping_rel
+            name = (f"serving_prefix_cache.{cfg.name}.P{P}.{policy}."
+                    f"{tag}.h{int(share * 100):03d}")
+            record(name, us,
+                   f"tok_s_rel_vs_nocache={tok_rel:.3f};"
+                   f"hits={counters['prefix_hits']};"
+                   f"cached_tokens={counters['cached_tokens']};"
+                   f"cow={counters['cow_copies']}")
+            _note(name, m, extra)
+
+
 def run_cluster(arch: str = "qwen2-7b", smoke: bool = True,
                 n_requests: int = 48, total_slots: int = 16,
                 prompt_len: int = 32, gen: int = 16,
@@ -518,6 +635,9 @@ def main(argv=None):
     run_cost_model_gap(args.arch, smoke=args.smoke, n_requests=n_req,
                        total_slots=args.slots, prompt_len=args.prompt_len,
                        gen=args.gen)
+    run_prefix_cache(args.arch, smoke=args.smoke, n_requests=n_req,
+                     total_slots=args.slots, prompt_len=args.prompt_len,
+                     gen=args.gen)
     if not args.no_cluster:
         run_cluster(args.arch, smoke=args.smoke, n_requests=n_req,
                     total_slots=args.slots, prompt_len=args.prompt_len,

@@ -71,6 +71,15 @@ def build_cluster_args(ap: argparse.ArgumentParser) -> None:
                          "serve.py (in-process) additionally writes the "
                          "profile after a live calibration run when the "
                          "file does not exist yet")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="automatic prefix caching in each engine's KV "
+                         "pool: requests whose prompt shares a cached "
+                         "prefix reference-share the resident blocks and "
+                         "prefill only the divergent tail (copy-on-write, "
+                         "LRU eviction under pool pressure; see "
+                         "docs/prefix_caching.md).  Caches are per "
+                         "engine/worker.  Requires the paged pool "
+                         "(incompatible with --dense)")
 
 
 def validate_cluster_args(ap: argparse.ArgumentParser, args) -> None:
@@ -84,6 +93,9 @@ def validate_cluster_args(ap: argparse.ArgumentParser, args) -> None:
     if args.profile is not None and args.cost_model != "measured":
         ap.error("--profile only applies to --cost-model measured; the "
                  "analytic model never reads a profile")
+    if getattr(args, "prefix_cache", False) and getattr(args, "dense", False):
+        ap.error("--prefix-cache shares KV *blocks* and needs the paged "
+                 "pool; it cannot be combined with --dense")
     if args.pd_split is not None:
         if args.router != "pd":
             ap.error(f"--pd-split only applies to --router pd "
@@ -105,7 +117,7 @@ def run_cluster(*, arch: str, smoke: bool, workers: int, slots: int,
                 dense: bool = False, heartbeat_timeout: float = 60.0,
                 max_queue=None, deadline=None, seed: int = 0,
                 quiet: bool = False, cost_model: str = "analytic",
-                profile=None, pd_split=None):
+                profile=None, pd_split=None, prefix_cache: bool = False):
     """Build the request load + worker fleet, run it, print the summary.
     Returns (controller, metrics)."""
     if profile is not None and cost_model != "measured":
@@ -146,8 +158,16 @@ def run_cluster(*, arch: str, smoke: bool, workers: int, slots: int,
     max_len = prompt_len + 4 * gen + (cfg.n_meta_tokens or 0) + \
         (cfg.n_img_tokens or 0)
 
+    if prefix_cache and dense:
+        raise ValueError("prefix_cache shares KV blocks and needs the "
+                         "paged pool; it cannot be combined with dense")
+
     def estimate(req):
-        pre = prefill_cost(cfg, slots, req.prompt_len, peak_per_worker)
+        # req.cached_len is 0 controller-side (worker pools are remote, so
+        # there is no admission-time probe in cluster mode); priced through
+        # anyway so a future cross-process probe needs no change here
+        pre = prefill_cost(cfg, slots, req.prompt_len, peak_per_worker,
+                           cached=req.cached_len)
         dec = decode_cost(cfg, slots, req.prompt_len + gen // 2,
                           peak_per_worker)
         return pre.duration + req.max_new_tokens * dec.duration
@@ -165,7 +185,8 @@ def run_cluster(*, arch: str, smoke: bool, workers: int, slots: int,
         engine="sim" if simulated else "real", block_size=block_size,
         paged=False if dense else None, seed=seed,
         cost_model=cost_model,
-        profile=str(profile) if profile is not None else None)
+        profile=str(profile) if profile is not None else None,
+        prefix_cache=prefix_cache)
     ctl = make_cluster(specs, queue, transport=transport, router=router_arg,
                        bandwidth=bandwidth,
                        heartbeat_timeout=heartbeat_timeout)
@@ -182,6 +203,7 @@ def run_cluster(*, arch: str, smoke: bool, workers: int, slots: int,
               f"{pd_note} "
               f"transport={transport} slots={workers}x{slots} "
               f"cost_model={cost_model} "
+              f"prefix_cache={'on' if prefix_cache else 'off'} "
               f"completed={s['requests_completed']}/{queue.n_submitted} "
               f"rejected={queue.n_rejected} requeued={queue.n_requeued} "
               f"failovers={ctl.n_failovers}")
@@ -238,7 +260,7 @@ def main(argv=None):
                 heartbeat_timeout=args.heartbeat_timeout,
                 max_queue=args.max_queue, deadline=args.deadline,
                 cost_model=args.cost_model, profile=args.profile,
-                pd_split=args.pd_split)
+                pd_split=args.pd_split, prefix_cache=args.prefix_cache)
 
 
 if __name__ == "__main__":

@@ -22,6 +22,12 @@ wall-clock timings instead of the analytic decomposition; with
 ``--profile PATH`` the run loads an existing calibration profile (frozen
 deterministic replay) or, when the file does not exist yet, calibrates
 live and writes it at exit — see ``docs/cost_models.md``.
+
+``--prefix-cache`` turns on automatic prefix caching in every engine's KV
+pool: shared prompt prefixes reference-share resident blocks, only the
+divergent tail is priced as prefill, and admission control probes the
+fleet's caches so deadline feasibility reflects the post-hit service time
+— see ``docs/prefix_caching.md``.
 """
 from __future__ import annotations
 
@@ -129,7 +135,7 @@ def main(argv=None):
             heartbeat_timeout=args.heartbeat_timeout,
             max_queue=args.max_queue, deadline=args.deadline,
             cost_model=args.cost_model, profile=args.profile,
-            pd_split=args.pd_split)
+            pd_split=args.pd_split, prefix_cache=args.prefix_cache)
         return [r.tokens for r in ctl.queue.completed]
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -150,22 +156,10 @@ def main(argv=None):
     max_len = args.prompt_len + 4 * args.gen + (cfg.n_meta_tokens or 0) + \
         (cfg.n_img_tokens or 0)
 
-    # --- request load + admission control ---
-    def estimate(req):
-        pre = prefill_cost(cfg, slots, req.prompt_len, peak_per_part)
-        dec = decode_cost(cfg, slots, req.prompt_len + args.gen // 2,
-                          peak_per_part)
-        return pre.duration + req.max_new_tokens * dec.duration
-
-    queue = RequestQueue(max_depth=args.max_queue, service_estimate=estimate)
-    rng = np.random.default_rng(0)
-    for _ in range(args.requests):
-        queue.submit(rng.integers(1, cfg.vocab, size=(args.prompt_len,))
-                     .astype(np.int32), args.gen, arrival=0.0,
-                     deadline=args.deadline)
-
     # --- engines: in-process the (read-only) params are aliased; real
-    # deployments replicate per partition (core.partitioning prices that) ---
+    # deployments replicate per partition (core.partitioning prices that).
+    # Built BEFORE the request load so admission control can probe the
+    # fleet's prefix caches (a hit-eligible request is priced post-hit).
     api = mapi.build(cfg)
     params = api.init(jax.random.PRNGKey(0))
     paged = (cfg.family != "encdec") and not args.dense
@@ -189,8 +183,30 @@ def main(argv=None):
                                block_size=args.block_size,
                                decode_fn=decode_fn, prefill_fn=prefill_fn,
                                prefill_uniform_fn=prefill_uniform_fn,
-                               cost_model=cost_model)
+                               cost_model=cost_model,
+                               prefix_cache=args.prefix_cache)
                for p in range(P)]
+
+    # --- request load + admission control ---
+    def estimate(req):
+        pre = prefill_cost(cfg, slots, req.prompt_len, peak_per_part,
+                           cached=req.cached_len)
+        dec = decode_cost(cfg, slots, req.prompt_len + args.gen // 2,
+                          peak_per_part)
+        return pre.duration + req.max_new_tokens * dec.duration
+
+    # the probe answers "how much of this prompt is already resident
+    # SOMEWHERE in the fleet" — optimistic across engines (the scheduler
+    # is free to seat the request on the engine that holds the prefix)
+    probe = (lambda req: max(e.peek_cached(req) for e in engines)) \
+        if args.prefix_cache else None
+    queue = RequestQueue(max_depth=args.max_queue, service_estimate=estimate,
+                         prefix_probe=probe)
+    rng = np.random.default_rng(0)
+    for _ in range(args.requests):
+        queue.submit(rng.integers(1, cfg.vocab, size=(args.prompt_len,))
+                     .astype(np.int32), args.gen, arrival=0.0,
+                     deadline=args.deadline)
 
     # pipe sized inside the load's phase dynamic range (see trace_sim);
     # smoke-scale models put both phases past the physical HBM number
@@ -212,6 +228,11 @@ def main(argv=None):
         if cost_model.timer is not None and args.profile is not None:
             out = save_profile(cost_model, args.profile)
             print(f"  cost model: calibration profile written to {out}")
+    if args.prefix_cache:
+        print(f"  prefix cache: hits={sum(e.n_prefix_hits for e in engines)} "
+              f"cached_tokens={sum(e.n_cached_tokens for e in engines)} "
+              f"cow={sum(e.pool.n_cow for e in engines)} "
+              f"evicted={sum(e.pool.n_evicted for e in engines)}")
     print(f"  throughput: {s['tok_per_s_virtual']:.1f} tok/s (virtual) "
           f"{s['tok_per_s_wall']:.1f} tok/s (wall)")
     print(f"  ttft p50={s['ttft_p50']*1e3:.3g}ms p95={s['ttft_p95']*1e3:.3g}ms"

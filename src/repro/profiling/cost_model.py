@@ -105,22 +105,40 @@ def _cost_from_traces(traces, batch: int, peak_flops: float,
     return PhaseCost(fl, by + extra_bytes, max(dur, 1e-15))
 
 
+def _eff_len(prompt_len: int, cached: int) -> int:
+    """Prompt tokens a prefill actually computes after a prefix-cache hit:
+    the uncached tail, floored at 1 (even a full hit recomputes the last
+    position to emit the first token).  ``cached=0`` — the cold path — is
+    the identity, so pre-caching pricing is bit-for-bit unchanged."""
+    return max(int(prompt_len) - max(int(cached), 0), 1)
+
+
 def prefill_cost(cfg: ModelConfig, batch: int, prompt_len: int,
                  peak_flops: float = hw.TPU_PEAK_FLOPS,
-                 dtype_bytes: int = 2) -> PhaseCost:
-    """One prefill wave of ``batch`` equal-length prompts (compute-bound)."""
-    return _cost_from_traces(_traces(cfg, prompt_len, dtype_bytes),
-                             batch, peak_flops)
+                 dtype_bytes: int = 2, cached: int = 0) -> PhaseCost:
+    """One prefill wave of ``batch`` equal-length prompts (compute-bound).
+    ``cached`` prompt tokens (a prefix-cache hit) are priced as free: only
+    the divergent tail costs FLOPs and traffic."""
+    return _cost_from_traces(_traces(cfg, _eff_len(prompt_len, cached),
+                                     dtype_bytes), batch, peak_flops)
 
 
 def prefill_cost_ragged(cfg: ModelConfig, lens: Sequence[int],
                         peak_flops: float = hw.TPU_PEAK_FLOPS,
-                        dtype_bytes: int = 2) -> PhaseCost:
+                        dtype_bytes: int = 2,
+                        cached_lens: Optional[Sequence[int]] = None
+                        ) -> PhaseCost:
     """One fused prefill wave over ragged prompt lengths.
 
     FLOPs and activation traffic accumulate per prompt at its own length;
     the weight stream is shared by the fused wave and counted once —
-    reduces exactly to ``prefill_cost`` when all lengths are equal."""
+    reduces exactly to ``prefill_cost`` when all lengths are equal.
+    ``cached_lens`` (per-prompt prefix-cache hit lengths, aligned with
+    ``lens``) shrinks each prompt to its uncached tail before pricing, so
+    the demand policy spaces from post-hit phase costs."""
+    if cached_lens is not None:
+        assert len(cached_lens) == len(lens), (len(cached_lens), len(lens))
+        lens = [_eff_len(l, c) for l, c in zip(lens, cached_lens)]
     counts = Counter(int(l) for l in lens)
     longest = max(counts)
     w_by = sum(tr.weight_bytes for tr in _traces(cfg, longest, dtype_bytes))
@@ -160,11 +178,14 @@ def decode_cost(cfg: ModelConfig, batch: int,
 class CostModel:
     """What an engine asks about phase costs, in one interface.
 
-    ``prefill(batch, prompt_len)``   — one equal-length prefill wave
-                                       (also batch-1 slot refills);
-    ``prefill_ragged(lens)``         — one fused ragged prefill wave;
-    ``decode(ctxs)``                 — one decode step over the per-slot
-                                       context vector ``ctxs``.
+    ``prefill(batch, prompt_len, cached=0)``
+        — one equal-length prefill wave (also batch-1 slot refills);
+          ``cached`` prompt tokens were a prefix-cache hit and only the
+          uncached tail is priced;
+    ``prefill_ragged(lens, cached_lens=None)``
+        — one fused ragged prefill wave, per-prompt hit lengths optional;
+    ``decode(ctxs)``
+        — one decode step over the per-slot context vector ``ctxs``.
 
     ``kind`` identifies the pricing source ("analytic" | "measured") —
     carried worker-side in ``cluster.protocol.WorkerStatus.cost_source`` so
@@ -177,10 +198,13 @@ class CostModel:
     kind = "abstract"
     timer: Optional[PhaseTimer] = None
 
-    def prefill(self, batch: int, prompt_len: int) -> PhaseCost:
+    def prefill(self, batch: int, prompt_len: int,
+                cached: int = 0) -> PhaseCost:
         raise NotImplementedError
 
-    def prefill_ragged(self, lens: Sequence[int]) -> PhaseCost:
+    def prefill_ragged(self, lens: Sequence[int],
+                       cached_lens: Optional[Sequence[int]] = None
+                       ) -> PhaseCost:
         raise NotImplementedError
 
     def decode(self, ctxs: Sequence[int]) -> PhaseCost:
@@ -201,13 +225,16 @@ class AnalyticCostModel(CostModel):
         self.peak_flops = float(peak_flops)
         self.dtype_bytes = int(dtype_bytes)
 
-    def prefill(self, batch: int, prompt_len: int) -> PhaseCost:
+    def prefill(self, batch: int, prompt_len: int,
+                cached: int = 0) -> PhaseCost:
         return prefill_cost(self.cfg, batch, prompt_len, self.peak_flops,
-                            self.dtype_bytes)
+                            self.dtype_bytes, cached)
 
-    def prefill_ragged(self, lens: Sequence[int]) -> PhaseCost:
+    def prefill_ragged(self, lens: Sequence[int],
+                       cached_lens: Optional[Sequence[int]] = None
+                       ) -> PhaseCost:
         return prefill_cost_ragged(self.cfg, lens, self.peak_flops,
-                                   self.dtype_bytes)
+                                   self.dtype_bytes, cached_lens)
 
     def decode(self, ctxs: Sequence[int]) -> PhaseCost:
         return decode_cost(self.cfg, len(ctxs), ctxs, self.peak_flops,
@@ -260,13 +287,21 @@ class MeasuredCostModel(CostModel):
         dur = self.blend * ema + (1.0 - self.blend) * ana.duration
         return PhaseCost(ana.flops, ana.byts, max(dur, 1e-15))
 
-    def prefill(self, batch: int, prompt_len: int) -> PhaseCost:
-        return self._priced(self.analytic.prefill(batch, prompt_len),
-                            "prefill", batch, prompt_len)
+    def prefill(self, batch: int, prompt_len: int,
+                cached: int = 0) -> PhaseCost:
+        # bucket on the EFFECTIVE (post-hit) length: a cached-prefix wave
+        # runs like a short one, and must share the short waves' EMA
+        eff = _eff_len(prompt_len, cached)
+        return self._priced(self.analytic.prefill(batch, prompt_len, cached),
+                            "prefill", batch, eff)
 
-    def prefill_ragged(self, lens: Sequence[int]) -> PhaseCost:
-        return self._priced(self.analytic.prefill_ragged(lens),
-                            "prefill", len(lens), max(int(l) for l in lens))
+    def prefill_ragged(self, lens: Sequence[int],
+                       cached_lens: Optional[Sequence[int]] = None
+                       ) -> PhaseCost:
+        effs = [int(l) for l in lens] if cached_lens is None else \
+            [_eff_len(l, c) for l, c in zip(lens, cached_lens)]
+        return self._priced(self.analytic.prefill_ragged(lens, cached_lens),
+                            "prefill", len(lens), max(effs))
 
     def decode(self, ctxs: Sequence[int]) -> PhaseCost:
         return self._priced(self.analytic.decode(ctxs),

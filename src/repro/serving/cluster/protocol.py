@@ -56,19 +56,24 @@ class WireRequest:
     max_new_tokens: int
     arrival: float = 0.0
     deadline: Optional[float] = None
+    # admission-time prefix-cache probe result (prompt tokens); the worker
+    # engine overwrites it with the actual match when the request seats
+    cached_len: int = 0
 
     @classmethod
     def from_request(cls, req: Request) -> "WireRequest":
         return cls(rid=req.rid,
                    prompt=tuple(int(t) for t in np.asarray(req.prompt)),
                    max_new_tokens=int(req.max_new_tokens),
-                   arrival=float(req.arrival), deadline=req.deadline)
+                   arrival=float(req.arrival), deadline=req.deadline,
+                   cached_len=int(getattr(req, "cached_len", 0)))
 
     def to_request(self) -> Request:
         return Request(rid=self.rid,
                        prompt=np.asarray(self.prompt, np.int32),
                        max_new_tokens=self.max_new_tokens,
-                       arrival=self.arrival, deadline=self.deadline)
+                       arrival=self.arrival, deadline=self.deadline,
+                       cached_len=self.cached_len)
 
 
 @dataclass(frozen=True)

@@ -154,6 +154,7 @@ class WorkerSpec:
     seed: int = 0
     cost_model: str = "analytic"  # phase pricing: "analytic" | "measured"
     profile: Optional[str] = None  # saved calibration profile (replay)
+    prefix_cache: bool = False   # per-worker KV-pool prefix index (COW)
 
 
 def _partition_mesh(spec: WorkerSpec):
@@ -194,7 +195,8 @@ def build_engine(spec: WorkerSpec) -> EngineBase:
             "--profile PATH ...")
     kw = dict(slots=spec.slots, max_len=spec.max_len, pid=spec.wid,
               peak_flops=spec.peak_flops, wave_only=spec.wave_only,
-              block_size=spec.block_size, cost_model=cost_model)
+              block_size=spec.block_size, cost_model=cost_model,
+              prefix_cache=spec.prefix_cache)
     if spec.engine == "sim":
         return SimulatedEngine(cfg, **kw)
     if spec.engine != "real":

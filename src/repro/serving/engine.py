@@ -56,8 +56,15 @@ from repro.profiling.cost_model import (AnalyticCostModel,  # noqa: F401
                                         CostModel, PhaseCost, decode_cost,
                                         prefill_cost, prefill_cost_ragged)
 from repro.profiling.timer import shape_key
-from repro.serving.kv_pool import BlockPool, PoolExhausted
+from repro.serving.kv_pool import (NULL_BLOCK, BlockPool, ChainAlloc,
+                                   PoolExhausted)
 from repro.serving.queue import Request
+
+# model families whose per-sequence state does not live (only) in KV blocks:
+# SSM/hybrid recurrent state is a per-slot array (not content-addressable by
+# token prefix) and enc-dec has no paged cache at all, so block-level prefix
+# sharing cannot represent a cached prefix for them
+_NO_PREFIX_CACHE_FAMILIES = ("ssm", "hybrid", "encdec")
 
 
 @dataclass
@@ -111,13 +118,20 @@ class EngineBase:
                  pid: int = 0, peak_flops: float = hw.TPU_PEAK_FLOPS,
                  block_size: int = 16, pool_blocks: Optional[int] = None,
                  wave_only: bool = False,
-                 cost_model: Optional[CostModel] = None):
+                 cost_model: Optional[CostModel] = None,
+                 prefix_cache: bool = False):
+        if prefix_cache and cfg.family in _NO_PREFIX_CACHE_FAMILIES:
+            raise ValueError(
+                f"prefix caching is not supported for the {cfg.family!r} "
+                "family: its per-sequence state is not (only) KV blocks, so "
+                "a shared block chain cannot stand in for a cached prefix")
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
         self.pid = pid
         self.peak_flops = peak_flops
         self.block_size = block_size
+        self.prefix_cache = bool(prefix_cache)
         # phase pricing: analytic by default (bit-for-bit the historical
         # behaviour); a MeasuredCostModel swaps in on-device durations and
         # its live timer (if any) is fed by _run_timed below
@@ -135,12 +149,17 @@ class EngineBase:
         # default pool: every slot can hold a full max_len chain (+ null)
         n_blocks = pool_blocks or \
             1 + slots * int(math.ceil(max_len / block_size))
-        self.pool = BlockPool(n_blocks, block_size)
+        self.pool = BlockPool(n_blocks, block_size,
+                              prefix_cache=self.prefix_cache)
         self.table_width = self.pool.blocks_for(max_len)
         self.backlog: List[Request] = []
         self.active: List[Optional[Request]] = [None] * slots
         self.slot_lens: List[int] = [0] * slots
         self.slot_tables: List[List[int]] = [[] for _ in range(slots)]
+        # leading reference-shared blocks per slot (prefix-cache hits): the
+        # real engine masks exactly these entries out of its page scatters,
+        # so shared content is written once by its original owner
+        self.slot_shared: List[int] = [0] * slots
         self.assign_order: List[int] = []  # rids in service order (tests)
         self.slot_tokens: List[List[int]] = [[] for _ in range(slots)]
         self.n_prefills = 0
@@ -148,6 +167,8 @@ class EngineBase:
         self.n_decode_steps = 0
         self.n_exports = 0
         self.n_imports = 0
+        self.n_prefix_hits = 0     # seatings that reused cached content
+        self.n_cached_tokens = 0   # cache positions served from the index
         self.completed: List[Request] = []
         self._prefix = (getattr(cfg, "n_meta_tokens", 0) or 0) + \
                        (getattr(cfg, "n_img_tokens", 0) or 0)
@@ -171,6 +192,52 @@ class EngineBase:
     def _ctx_budget(self, req: Request) -> int:
         """Cache positions this request needs end-to-end."""
         return self._prefix + req.prompt_len + req.max_new_tokens
+
+    # -- prefix caching ------------------------------------------------------
+    def _prefix_key(self, req: Request) -> list:
+        """Content key for the prefix index: one sentinel per meta/img
+        position (their embeddings are request-independent in the current
+        frontends, so every request shares them) followed by the prompt
+        token ids."""
+        return [("pfx", j) for j in range(self._prefix)] + \
+            [int(t) for t in np.asarray(req.prompt).reshape(-1)]
+
+    def peek_cached(self, req: Request) -> int:
+        """Prompt tokens of ``req`` the prefix cache would serve right now
+        (0 when caching is off).  Pure peek — admission-control probes and
+        the demand policy's cost estimates price from this without
+        touching pool state."""
+        if not self.prefix_cache:
+            return 0
+        hit = self.pool.peek_cached_tokens(self._prefix_key(req))
+        return max(hit - self._prefix, 0)
+
+    def _alloc_blocks(self, req: Request) -> ChainAlloc:
+        """Allocate ``req``'s full-budget block chain, reusing cached
+        prefix blocks when caching is on (all-or-nothing either way)."""
+        need = self._ctx_budget(req)
+        if not self.prefix_cache:
+            return ChainAlloc(self.pool.alloc_for_tokens(need))
+        return self.pool.alloc_chain(self._prefix_key(req), need)
+
+    def _seat_blocks(self, i: int, req: Request, ca: ChainAlloc) -> None:
+        """Install an allocated chain into slot ``i``'s bookkeeping and
+        stamp the request's actual hit length (prompt-token units)."""
+        self.slot_tables[i] = ca.table
+        self.slot_shared[i] = ca.shared_blocks
+        req.cached_len = max(ca.cached_tokens - self._prefix, 0)
+        if ca.cached_tokens:
+            self.n_prefix_hits += 1
+            self.n_cached_tokens += ca.cached_tokens
+
+    def _register_prefix(self, i: int, req: Request) -> None:
+        """Publish slot ``i``'s prompt-content blocks in the prefix index
+        (generated tokens are never shared, so registration stops at the
+        end of the prompt)."""
+        if self.prefix_cache:
+            self.pool.register_chain(self._prefix_key(req),
+                                     self.slot_tables[i],
+                                     self._prefix + req.prompt_len)
 
     # -- KV handoff (prefill/decode disaggregation) --------------------------
     def export_kv(self, rid: int):
@@ -200,8 +267,11 @@ class EngineBase:
             "pages": self._export_slot_state(i),
         }
         self.active[i] = None
+        # a decref, not a destroy: blocks shared with other chains (or
+        # published in the prefix index) survive the donor's departure
         self.pool.free(self.slot_tables[i])
         self.slot_tables[i] = []
+        self.slot_shared[i] = 0
         self.slot_lens[i] = 0
         self.n_exports += 1
         return req, state
@@ -233,11 +303,16 @@ class EngineBase:
                 f"{self.pool.blocks_for(need)} blocks; pool has "
                 f"{self.pool.n_free} of {self.pool.n_blocks}")
         i = free[0]
-        self.slot_tables[i] = self.pool.alloc_for_tokens(need)
+        # re-match the prompt against the recipient's own prefix index: a
+        # shared system prompt already resident here is reference-shared
+        # instead of re-stored, and the handoff scatter masks those blocks
+        # out (their content is already authoritative on this engine)
+        self._seat_blocks(i, req, self._alloc_blocks(req))
         self.active[i] = req
         self.slot_lens[i] = int(state["len"])
         self.assign_order.append(req.rid)
         self._import_slot_state(i, state.get("pages") or {}, req)
+        self._register_prefix(i, req)
         self.n_imports += 1
         return i
 
@@ -245,7 +320,11 @@ class EngineBase:
     def prefill_cost_est(self) -> PhaseCost:
         n = min(self.slots, max(len(self.backlog), 1))
         plen = self.backlog[0].prompt_len if self.backlog else self.max_len // 2
-        return self.cost_model.prefill(n, plen)
+        # price the NEXT wave as it would actually run: a resident shared
+        # prefix makes it cheaper, and the demand policy must space from
+        # the post-hit cost, not the cold one
+        cached = self.peek_cached(self.backlog[0]) if self.backlog else 0
+        return self.cost_model.prefill(n, plen, cached)
 
     def decode_cost_est(self) -> PhaseCost:
         ctxs = [max(l, 1) for r, l in zip(self.active, self.slot_lens)
@@ -299,8 +378,8 @@ class EngineBase:
             if not self.pool.can_fit(self._ctx_budget(req)):
                 break  # pool exhausted: the rest stays queued (FIFO)
             wave.append(req)
-            self.slot_tables[len(wave) - 1] = self.pool.alloc_for_tokens(
-                self._ctx_budget(req))
+            self._seat_blocks(len(wave) - 1, req, self._alloc_blocks(req))
+            self._register_prefix(len(wave) - 1, req)  # intra-wave sharing
         if not wave:
             raise PoolExhausted(
                 f"request {self.backlog[0].rid} needs "
@@ -308,7 +387,8 @@ class EngineBase:
                 f"blocks; pool has {self.pool.n_free} of {self.pool.n_blocks}")
         self.backlog = self.backlog[len(wave):]
         lens = [r.prompt_len for r in wave]
-        cost = self.cost_model.prefill_ragged(lens)
+        cost = self.cost_model.prefill_ragged(
+            lens, [r.cached_len for r in wave] if self.prefix_cache else None)
         first = self._run_timed("prefill", len(wave), max(lens),
                                 lambda: self._run_prefill(wave))
         for i, req in enumerate(wave):
@@ -370,6 +450,7 @@ class EngineBase:
         self.active[i] = None
         self.pool.free(self.slot_tables[i])
         self.slot_tables[i] = []
+        self.slot_shared[i] = 0
         self.slot_lens[i] = 0
 
     def _finish_done(self, t_end: float) -> Optional[PhaseCost]:
@@ -394,9 +475,10 @@ class EngineBase:
                     # over-budget requests surface as ValueError at the wave
                     break
                 self.backlog.pop(0)
-                self.slot_tables[i] = self.pool.alloc_for_tokens(
-                    self._ctx_budget(nxt))
-                c = self.cost_model.prefill(1, nxt.prompt_len)
+                self._seat_blocks(i, nxt, self._alloc_blocks(nxt))
+                self._register_prefix(i, nxt)
+                c = self.cost_model.prefill(1, nxt.prompt_len,
+                                            nxt.cached_len)
                 tok = self._run_timed("prefill", 1, nxt.prompt_len,
                                       lambda: self._refill_slot(i, nxt))
                 self.active[i] = nxt
@@ -476,11 +558,12 @@ class PartitionEngine(EngineBase):
                  paged: Optional[bool] = None,
                  block_size: int = 16, pool_blocks: Optional[int] = None,
                  wave_only: bool = False,
-                 cost_model: Optional[CostModel] = None):
+                 cost_model: Optional[CostModel] = None,
+                 prefix_cache: bool = False):
         super().__init__(cfg, slots=slots, max_len=max_len, pid=pid,
                          peak_flops=peak_flops, block_size=block_size,
                          pool_blocks=pool_blocks, wave_only=wave_only,
-                         cost_model=cost_model)
+                         cost_model=cost_model, prefix_cache=prefix_cache)
         import jax
 
         self.api = api
@@ -488,6 +571,10 @@ class PartitionEngine(EngineBase):
         self.paged = (cfg.family != "encdec") if paged is None else paged
         if self.paged and cfg.family == "encdec":
             raise ValueError("paged KV is not supported for enc-dec models")
+        if self.prefix_cache and not self.paged:
+            raise ValueError("prefix caching shares KV *blocks* and needs "
+                             "the paged pool (paged=True); the dense "
+                             "per-wave slab has no blocks to share")
         # engines may share jitted phase fns (same shapes -> one executable)
         if self.paged:
             self._decode_fn = decode_fn or jax.jit(api.decode_paged,
@@ -610,6 +697,11 @@ class PartitionEngine(EngineBase):
             tables = np.zeros((len(rows), self.table_width), np.int32)
             for j, i in enumerate(rows):
                 tables[j, :len(self.slot_tables[i])] = self.slot_tables[i]
+                # prefix-cache hit: the leading shared blocks already hold
+                # this content (written once by their original owner) —
+                # divert their rewrite to the null block so a reference-
+                # shared block is never written
+                tables[j, :self.slot_shared[i]] = NULL_BLOCK
             src_a = jnp.asarray(src, jnp.int32)
             self.pages.update(KV.write_prefix_pages(
                 {"k_pages": self.pages["k_pages"],
@@ -720,7 +812,12 @@ class PartitionEngine(EngineBase):
                         f"handoff carries {pages['k'].shape[1]} blocks but "
                         f"slot {i} allocated {n_blk} (block_size mismatch "
                         "across the fleet?)")
-                tbl = jnp.asarray(np.asarray(self.slot_tables[i], np.int32))
+                tbl_np = np.asarray(self.slot_tables[i], np.int32).copy()
+                # blocks re-matched from this engine's own prefix index
+                # already hold the donor's prefix content — mask them out
+                # of the scatter (shared blocks are never written)
+                tbl_np[:self.slot_shared[i]] = NULL_BLOCK
+                tbl = jnp.asarray(tbl_np)
                 kd = self.pages["k_pages"].dtype
                 self.pages["k_pages"] = self.pages["k_pages"].at[:, tbl].set(
                     jnp.asarray(pages["k"]).astype(kd))

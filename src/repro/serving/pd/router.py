@@ -23,7 +23,15 @@ partitions the fleet into a PREFILL pool and a DECODE pool:
     from: the EMA of ``pre_dur / wave_dur`` is the prefill share of a
     request's service time, and idle workers migrate between pools until
     the split matches it (auto mode only — an explicit ``--pd-split``
-    pins the split).
+    pins the split).  Prefix caching composes transparently: workers
+    price ``pre_dur`` post-hit (``prefill_cost_est`` sees their own
+    cache), so a hit-heavy load shrinks the observed prefill share and
+    the rebalance shifts workers toward decode — the cache *removing*
+    compute phases is exactly the signal the split follows.  Handoffs
+    re-match on the decode side: ``import_kv`` reference-shares any
+    prefix already resident on the recipient instead of double-storing
+    it, and ``export_kv`` only drops the donor's references (shared
+    blocks survive), so a handoff never double-frees shared state.
 
 Failover: a dying worker's seated requests fail over through the
 controller's normal requeue path.  A handoff in flight when its only

@@ -26,6 +26,12 @@ class Request:
     max_new_tokens: int
     arrival: float = 0.0            # virtual s
     deadline: Optional[float] = None  # absolute virtual completion deadline
+    # prefix-cache hit length (cache positions whose content was already
+    # resident when the request was seated).  The queue's admission probe
+    # fills in a submission-time estimate so deadline feasibility prices
+    # the post-hit prefill; the engine overwrites it with the actual match
+    # at seating.  0 = cold (the only value when caching is off).
+    cached_len: int = 0
     # filled in by the engine:
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
@@ -47,12 +53,22 @@ class RequestQueue:
     seconds to serve ``req`` end-to-end (queueing excluded); a request whose
     deadline cannot be met even if started immediately is rejected at
     submission (cheaper than accepting work that is guaranteed late).
+
+    ``prefix_probe(req)`` — optional callable returning the prefix-cache
+    hit length (cache positions already resident) the fleet would serve
+    ``req`` with.  It runs BEFORE the feasibility check and its result is
+    stored on ``req.cached_len``, so ``service_estimate`` prices the
+    post-hit prefill — without it, a hit-eligible request whose COLD
+    service time overshoots its deadline is wrongly rejected even though
+    the cached run would meet it.
     """
 
     def __init__(self, max_depth: Optional[int] = None,
-                 service_estimate: Optional[Callable[[Request], float]] = None):
+                 service_estimate: Optional[Callable[[Request], float]] = None,
+                 prefix_probe: Optional[Callable[[Request], int]] = None):
         self.max_depth = max_depth
         self.service_estimate = service_estimate
+        self.prefix_probe = prefix_probe
         self._fifo: List[Request] = []
         self._next_rid = 0
         self.n_submitted = 0
@@ -72,6 +88,8 @@ class RequestQueue:
         if self.max_depth is not None and len(self._fifo) >= self.max_depth:
             self.n_rejected += 1
             return None
+        if self.prefix_probe is not None:
+            req.cached_len = int(self.prefix_probe(req))
         if (deadline is not None and self.service_estimate is not None
                 and arrival + self.service_estimate(req) > deadline):
             self.n_rejected += 1

@@ -83,7 +83,11 @@ def _demand_spacing(engine, n_engines: int) -> float:
     """The demand policy's wave-start spacing, priced from the engine's
     cost model (analytic by default, measured when one is attached):
     ``max(prefill_duration, wave_time / P)`` (shared by both clocks so
-    they gate on the identical quantity)."""
+    they gate on the identical quantity).  ``prefill_cost_est`` prices the
+    next wave as it would actually run — under a prefix cache a resident
+    shared prefix shrinks the estimate to the divergent tail, so hits
+    (which remove compute-bound phase time from the schedule) tighten the
+    spacing instead of leaving the rule pacing against phantom prefills."""
     pre = engine.prefill_cost_est()
     gen_est = engine.backlog[0].max_new_tokens
     wave = pre.duration + gen_est * engine.decode_cost_est().duration

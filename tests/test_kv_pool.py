@@ -1,8 +1,12 @@
 """BlockPool allocator invariants: alloc/free round-trips never double-
 assign a block, exhaustion is a hard report (never a silent truncation),
-and freed blocks are immediately reusable.  Property tests run through the
+freed blocks are immediately reusable, and — with the prefix index on —
+reference-shared chains free/evict without ever double-freeing or
+reclaiming a live block.  Property tests run through the
 optional-hypothesis shim; the plain tests pin the same invariants without
 it."""
+from collections import Counter
+
 import pytest
 
 from _hypothesis_compat import given, settings, st
@@ -59,6 +63,134 @@ def test_double_free_and_foreign_free_rejected():
     pool.free([NULL_BLOCK])          # the null block is always a no-op
 
 
+def test_free_mixed_live_dead_is_all_or_nothing():
+    """Regression: a free list mixing live and dead ids must raise WITHOUT
+    freeing the live ones — the old code freed prefix-of-list before hitting
+    the bad id, leaving the pool half-mutated."""
+    pool = BlockPool(8, 4)
+    a = pool.alloc(2)
+    b = pool.alloc(2)
+    pool.free(a)
+    before = pool.n_free
+    with pytest.raises(ValueError):
+        pool.free([b[0], a[0], b[1]])   # a[0] is dead: whole call rejected
+    assert pool.n_free == before        # b's blocks are still live...
+    pool.free(b)                        # ...and freeable in one piece
+    assert pool.n_free == 7
+    c = pool.alloc(1)
+    with pytest.raises(ValueError):
+        # one live id listed more times than it holds references
+        pool.free([c[0], c[0]])
+    assert pool.refcount(c[0]) == 1     # over-free mutated nothing
+
+
+def test_zero_token_budget_needs_no_blocks():
+    pool = BlockPool(5, 8)
+    assert pool.blocks_for(0) == 0      # was 1: an empty chain burnt a block
+    assert pool.blocks_for(-3) == 0
+    assert pool.alloc_for_tokens(0) == []
+    assert pool.n_free == 4 and pool.can_fit(0)
+
+
+def test_write_prefix_pages_rejects_overflow():
+    """A prefix longer than the table capacity raises instead of silently
+    truncating context (the pad<0 path used to wrap around)."""
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.serving.kv_pool import write_prefix_pages
+
+    L, B, Hkv, D, bs, T = 1, 1, 1, 2, 4, 2
+    pages = {"k_pages": jnp.zeros((L, 8, bs, Hkv, D)),
+             "v_pages": jnp.zeros((L, 8, bs, Hkv, D))}
+    tables = jnp.asarray([[1, 2]], jnp.int32)
+    good = jnp.ones((L, B, T * bs, Hkv, D))
+    write_prefix_pages(pages, good, good, tables)   # exactly full: fine
+    bad = jnp.ones((L, B, T * bs + 1, Hkv, D))
+    with pytest.raises(ValueError, match="never silently truncates"):
+        write_prefix_pages(pages, bad, bad, tables)
+
+
+# ---------------------------------------------------------------------------
+# prefix index: sharing, copy-on-write, LRU eviction
+# ---------------------------------------------------------------------------
+
+
+def test_alloc_chain_shares_full_blocks_and_cows_partial():
+    pool = BlockPool(20, 4, prefix_cache=True)
+    key = list(range(100, 110))                   # 10 tokens: 2 full + 2
+    ca1 = pool.alloc_chain(key, 12)
+    assert ca1.cached_tokens == 0 and ca1.shared_blocks == 0
+    pool.register_chain(key, ca1.table, 10)
+    ca2 = pool.alloc_chain(key, 12)
+    assert ca2.table[:2] == ca1.table[:2]         # full blocks shared
+    assert ca2.table[2] != ca1.table[2]           # partial never shared
+    assert ca2.shared_blocks == 2
+    assert (ca2.cow_src, ca2.cow_len) == (ca1.table[2], 2)
+    assert ca2.cached_tokens == 2 * 4 + 2         # full blocks + COW prefix
+    assert pool.refcount(ca1.table[0]) == 2
+    assert pool.n_hits == 1 and pool.n_cow == 1
+
+
+def test_last_table_entry_is_always_owned():
+    """Decode appends land in the last table entry, so even a whole-prompt
+    hit must leave it owned (refcount 1, unshared)."""
+    pool = BlockPool(20, 4, prefix_cache=True)
+    key = list(range(8))                          # exactly 2 full blocks
+    ca1 = pool.alloc_chain(key, 8)
+    pool.register_chain(key, ca1.table, 8)
+    ca2 = pool.alloc_chain(key, 8)
+    assert ca2.table[0] == ca1.table[0]           # head shared
+    assert ca2.table[1] != ca1.table[1]           # tail owned
+    assert ca2.shared_blocks == 1
+    assert pool.refcount(ca2.table[1]) == 1
+
+
+def test_freed_published_blocks_park_cached_then_resurrect():
+    pool = BlockPool(20, 4, prefix_cache=True)
+    key = list(range(12))
+    ca = pool.alloc_chain(key, 12)
+    pool.register_chain(key, ca.table, 12)
+    free_before = pool.n_free
+    pool.free(ca.table)
+    assert pool.n_live == 0
+    assert pool.n_cached == 3                     # published: evictable,
+    assert pool.n_free == free_before             # NOT back on the free list
+    hit = pool.alloc_chain(key, 16)
+    assert hit.table[:3] == ca.table[:3]          # resurrected, same ids
+    assert hit.cached_tokens == 12
+    assert all(pool.refcount(b) == 1 for b in hit.table)
+
+
+def test_eviction_reclaims_lru_and_spares_live_chains():
+    pool = BlockPool(7, 4, prefix_cache=True)     # 6 usable blocks
+    cold_key = list(range(200, 208))
+    cold = pool.alloc_chain(cold_key, 8)          # 2 blocks, then cached
+    pool.register_chain(cold_key, cold.table, 8)
+    pool.free(cold.table)
+    hot = pool.alloc_chain(list(range(300, 312)), 12)   # 3 live blocks
+    assert pool.n_free == 1 and pool.n_cached == 2
+    got = pool.alloc(3)                           # needs 2 evictions
+    assert pool.n_evicted == 2
+    assert not set(got) & set(hot.table)          # live chain untouched
+    assert pool.peek_cached_tokens(cold_key) == 0  # index entries dropped
+    with pytest.raises(PoolExhausted):
+        pool.alloc(1)                             # nothing left to evict
+    assert pool.refcount(hot.table[0]) == 1       # failed alloc took nothing
+
+
+def test_alloc_chain_rolls_back_shared_refs_on_exhaustion():
+    pool = BlockPool(4, 4, prefix_cache=True)     # 3 usable blocks
+    key = list(range(8))
+    ca = pool.alloc_chain(key, 8)
+    pool.register_chain(key, ca.table, 8)
+    pool.free(ca.table)                           # both blocks parked cached
+    with pytest.raises(PoolExhausted):
+        pool.alloc_chain(key + list(range(8, 20)), 20)  # needs 5 blocks
+    assert pool.n_live == 0                       # shared incref rolled back
+    assert pool.n_cached == 2                     # ...and re-parked
+    again = pool.alloc_chain(key, 8)              # cache still serves hits
+    assert again.cached_tokens == 4
+
+
 # ---------------------------------------------------------------------------
 # property tests (model-based alloc/free interleaving)
 # ---------------------------------------------------------------------------
@@ -92,6 +224,43 @@ def test_alloc_free_round_trip_invariants(n_blocks, sizes):
     for g in live:
         pool.free(g)
     assert pool.n_free == n_blocks - 1 and pool.n_live == 0
+
+
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(1, 4),
+                          st.booleans()),
+                min_size=1, max_size=40))
+@settings(max_examples=50, deadline=None)
+def test_prefix_cache_refcount_and_eviction_invariants(ops):
+    """Random alloc_chain/register/free interleavings over three hot keys:
+    every block's refcount equals the number of live chains holding it, no
+    live block ever reappears on the free list (eviction spares live
+    chains), the free/live/cached partition always conserves the pool, and
+    the final teardown frees every chain exactly once (no double free of
+    still-referenced shared blocks)."""
+    pool = BlockPool(12, 4, prefix_cache=True)
+    keys = [[k * 100 + t for t in range(10)] for k in range(3)]
+    live = []
+    for key_i, nblk, do_free in ops:
+        if do_free and live:
+            pool.free(live.pop(0))
+        else:
+            try:
+                ca = pool.alloc_chain(keys[key_i], nblk * 4)
+            except PoolExhausted:
+                pass
+            else:
+                pool.register_chain(keys[key_i], ca.table, nblk * 4)
+                live.append(ca.table)
+        held = Counter(b for t in live for b in t)
+        assert all(pool.refcount(b) == c for b, c in held.items())
+        assert pool.n_live == len(held)
+        assert not set(pool._free) & set(held)
+        assert pool.n_free + pool.n_live + pool.n_cached \
+            == pool.n_blocks - 1
+    for t in live:
+        pool.free(t)                     # shared refs unwind one at a time
+    assert pool.n_live == 0
+    assert pool.n_free + pool.n_cached == pool.n_blocks - 1
 
 
 @given(st.lists(st.integers(1, 6), min_size=1, max_size=20))

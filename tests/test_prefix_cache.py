@@ -1,0 +1,269 @@
+"""Prefix caching through the serving stack.
+
+Pins the PR's acceptance gates:
+  * the oracle — on the real paged ``PartitionEngine`` the HIT path
+    (leading blocks reference-shared from a previous request, scatter
+    masked, decode reading the donor's pages) produces logits and tokens
+    BIT-IDENTICAL to a cold engine serving the same request;
+  * engine semantics — wave-mates share the common head intra-wave, slot
+    refills re-match the index, and the prefill costs the demand policy
+    spaces from (``prefill_cost_est``, the issued wave's ``PhaseCost``)
+    price only the uncached tail;
+  * admission — ``RequestQueue``'s deadline feasibility sees the probe's
+    hit estimate, pinned on both sides of the boundary (a hit-eligible
+    request whose COLD estimate overshoots is admitted; one infeasible
+    even post-hit is still rejected);
+  * PD handoff — exporting a request whose head is reference-shared only
+    drops its own references (the donor chain survives), and the import
+    re-matches the recipient's own index instead of double-storing a
+    prefix already resident there.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import hw
+from repro.serving import (PartitionEngine, RequestQueue, SimulatedEngine)
+
+ARCH = "qwen2-7b"
+BS = 8           # block size used throughout: a 16-token head = 2 blocks
+HEAD = 16        # shared system-prompt length
+
+
+def _cfg():
+    return get_config(ARCH, smoke=True)
+
+
+def _prompts(cfg, tails, seed=5):
+    """Prompts sharing one ``HEAD``-token head, each with a unique tail."""
+    rng = np.random.default_rng(seed)
+    head = rng.integers(1, cfg.vocab, size=(HEAD,)).astype(np.int32)
+    return [np.concatenate([head, rng.integers(1, cfg.vocab, size=(t,))
+                            .astype(np.int32)]) for t in tails]
+
+
+def _sim(cfg, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 48)
+    return SimulatedEngine(cfg, peak_flops=hw.TPU_PEAK_FLOPS,
+                           block_size=BS, **kw)
+
+
+# ---------------------------------------------------------------------------
+# engine semantics + cost repricing (simulated engine)
+# ---------------------------------------------------------------------------
+
+
+def test_wave_mates_share_head_and_wave_is_cheaper():
+    cfg = _cfg()
+    prompts = _prompts(cfg, [4, 4])
+
+    def serve(cache):
+        q = RequestQueue()
+        for p in prompts:
+            q.submit(p, 4)
+        eng = _sim(cfg, prefix_cache=cache)
+        eng.assign(q.pop(2))
+        cost = eng.prefill_wave(0.0)
+        return eng, cost.duration
+
+    cold, cold_dur = serve(False)
+    warm, warm_dur = serve(True)
+    assert warm.n_prefix_hits == 1          # second wave-mate hit
+    assert warm.active[1].cached_len == HEAD
+    assert warm.slot_shared == [0, 2] and cold.slot_shared == [0, 0]
+    assert warm.slot_tables[1][:2] == warm.slot_tables[0][:2]
+    assert warm.pool.refcount(warm.slot_tables[0][0]) == 2
+    assert warm_dur < cold_dur              # wave priced on uncached tail
+    for eng in (cold, warm):
+        while eng.busy:
+            eng.decode_step(0.0)
+        assert len(eng.completed) == 2 and eng.pool.n_live == 0
+    assert warm.pool.n_cached > 0           # published chains stay reusable
+    assert cold.pool.n_cached == 0
+
+
+def test_slot_refill_rematches_index():
+    cfg = _cfg()
+    prompts = _prompts(cfg, [4, 6])
+    q = RequestQueue()
+    for p in prompts:
+        q.submit(p, 4)
+    eng = _sim(cfg, slots=1, prefix_cache=True)
+    eng.assign(q.pop(2))
+    eng.prefill_wave(0.0)
+    while eng.busy:
+        eng.decode_step(0.0)
+    assert len(eng.completed) == 2
+    assert eng.n_refills == 1 and eng.n_prefix_hits == 1
+    assert eng.completed[1].cached_len == HEAD
+    assert eng.pool.n_live == 0
+
+
+def test_prefill_cost_est_prices_post_hit():
+    cfg = _cfg()
+    prompts = _prompts(cfg, [4, 4])
+    q = RequestQueue()
+    for p in prompts:
+        q.submit(p, 4)
+    eng = _sim(cfg, slots=1, prefix_cache=True)
+    eng.assign(q.pop(2))
+    cold_est = eng.prefill_cost_est().duration   # nothing registered yet
+    eng.prefill_wave(0.0)                        # seats + registers req0
+    assert eng.peek_cached(eng.backlog[0]) == HEAD
+    warm_est = eng.prefill_cost_est().duration   # prices req1 post-hit
+    assert warm_est < cold_est
+
+
+def test_cache_off_and_excluded_families():
+    cfg = _cfg()
+    eng = _sim(cfg)                              # default: off
+    q = RequestQueue()
+    q.submit(_prompts(cfg, [4])[0], 4)
+    assert eng.peek_cached(q.pop(1)[0]) == 0
+    with pytest.raises(ValueError, match="not supported"):
+        _sim(get_config("mamba2-130m", smoke=True), prefix_cache=True)
+
+
+# ---------------------------------------------------------------------------
+# admission: deadline feasibility sees the probe (satellite: queue fix)
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_feasibility_prices_post_hit_prefill():
+    cfg = _cfg()
+    prompts = _prompts(cfg, [4, 4])
+    eng = _sim(cfg, prefix_cache=True)
+    seed_q = RequestQueue()
+    seed_q.submit(prompts[0], 4)
+    eng.assign(seed_q.pop(1))
+    eng.prefill_wave(0.0)                        # index now holds the head
+
+    def est(req):                                # 0.1 s per uncached token
+        return 0.1 * (req.prompt_len - req.cached_len)
+
+    # cold estimate 2.0 s; post-hit (16 cached of 20) estimate 0.4 s
+    blind = RequestQueue(service_estimate=est)
+    assert blind.submit(prompts[1], 4, deadline=1.0) is None  # wrong reject
+    probed = RequestQueue(service_estimate=est,
+                          prefix_probe=eng.peek_cached)
+    ok = probed.submit(prompts[1], 4, deadline=1.0)
+    assert ok is not None and ok.cached_len == HEAD           # admitted
+    # both sides of the boundary, same probe
+    assert probed.submit(prompts[1], 4, deadline=0.5) is not None
+    assert probed.submit(prompts[1], 4, deadline=0.3) is None
+    assert probed.n_rejected == 1
+
+
+# ---------------------------------------------------------------------------
+# PD handoff: shared-prefix export/import never double-frees or re-stores
+# ---------------------------------------------------------------------------
+
+
+def test_handoff_with_shared_prefix_survives_and_rematches():
+    cfg = _cfg()
+    prompts = _prompts(cfg, [4, 6, 5])
+    src = _sim(cfg, prefix_cache=True)
+    q = RequestQueue()
+    reqs = [q.submit(p, 4) for p in prompts[:2]]
+    src.assign(q.pop(2))
+    src.prefill_wave(0.0)
+    assert src.slot_shared[1] == 2               # wave-mates share the head
+    head_block = src.slot_tables[0][0]
+    assert src.pool.refcount(head_block) == 2
+
+    # exporting the SHARING request is a decref: the donor chain survives
+    req, state = src.export_kv(reqs[1].rid)
+    assert src.pool.refcount(head_block) == 1
+    while src.busy:                              # donor decodes to the end
+        src.decode_step(0.0)
+    assert src.pool.n_live == 0                  # no double free on retire
+
+    # recipient served the same system prompt before: its index is warm
+    dst = _sim(cfg, pid=1, prefix_cache=True)
+    q2 = RequestQueue()
+    q2.submit(prompts[2], 4)
+    dst.assign(q2.pop(1))
+    dst.prefill_wave(0.0)
+    while dst.busy:
+        dst.decode_step(0.0)
+    assert dst.pool.n_cached > 0
+    slot = dst.import_kv(req, state)
+    assert dst.n_prefix_hits == 1                # import re-matched locally
+    assert req.cached_len == HEAD
+    assert dst.slot_shared[slot] == 2
+    while dst.busy:
+        dst.decode_step(0.0)
+    done = {r.rid: r for r in dst.completed}
+    assert len(done[req.rid].tokens) == req.max_new_tokens
+    assert dst.pool.n_live == 0
+
+
+# ---------------------------------------------------------------------------
+# the oracle: real paged engine, hit path bit-identical to cold path
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def built():
+    import jax
+    from repro.models import api as mapi
+
+    # float32 so the bitwise comparison is about dataflow, not rounding
+    cfg = get_config(ARCH, smoke=True).replace(dtype="float32")
+    m = mapi.build(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _real(cfg, m, params, cache):
+    return PartitionEngine(cfg, m, params, slots=2, max_len=48,
+                           peak_flops=hw.TPU_PEAK_FLOPS, paged=True,
+                           block_size=BS, prefix_cache=cache)
+
+
+def _drive_one(eng, prompt, gen=4):
+    """Serve one request to completion; returns (decode logits, tokens)."""
+    q = RequestQueue()
+    q.submit(prompt, gen)
+    eng.assign(q.pop(1))
+    eng.prefill_wave(0.0)
+    i = next(j for j, r in enumerate(eng.active) if r is not None)
+    logits = []
+    while eng.busy:
+        eng.decode_step(0.0)
+        logits.append(np.asarray(eng.last_logits[i]).copy())
+    return logits, list(eng.completed[-1].tokens)
+
+
+def test_hit_path_logits_bit_identical_to_cold_oracle(built):
+    """A request whose head is served from another request's pages (scatter
+    masked to the null block, decode gathering the donor's blocks) must
+    produce logits BIT-identical to a cold engine that wrote every block
+    itself — shared content is written once and read in place, never
+    approximated."""
+    cfg, m, params = built
+    prompts = _prompts(cfg, [4, 4], seed=9)
+
+    warm = _real(cfg, m, params, True)
+    _drive_one(warm, prompts[0])                 # cold fill: registers head
+    hit_logits, hit_tokens = _drive_one(warm, prompts[1])
+    assert warm.n_prefix_hits == 1               # second drive hit the index
+    assert warm.n_cached_tokens == HEAD
+    assert warm.pool.n_hits == 1
+
+    cold = _real(cfg, m, params, False)
+    ref_logits, ref_tokens = _drive_one(cold, prompts[1])
+    assert hit_tokens == ref_tokens
+    assert len(hit_logits) == len(ref_logits) > 0
+    for h, r in zip(hit_logits, ref_logits):
+        np.testing.assert_array_equal(h, r)      # bitwise, not allclose
+
+    # and the donor's own pages were never rewritten by the hit request:
+    # serving the FIRST prompt again still matches its cold oracle exactly
+    again_logits, again_tokens = _drive_one(warm, prompts[0])
+    cold2 = _real(cfg, m, params, False)
+    ref2_logits, ref2_tokens = _drive_one(cold2, prompts[0])
+    assert again_tokens == ref2_tokens
+    for h, r in zip(again_logits, ref2_logits):
+        np.testing.assert_array_equal(h, r)
