@@ -28,6 +28,8 @@ def main() -> None:
         (serving_shaping.run_ragged, ()),    # paged per-slot batching path
         (serving_shaping.run_clock_gap, ()),  # event-vs-lockstep clock axis
         (serving_shaping.run_cost_model_gap, ()),  # measured-vs-analytic
+        (serving_shaping.run_prefix_cache, ()),  # KV-pool prefix caching
+        (serving_shaping.run_kv_quant, ()),  # quantized/sparse KV repricing
         (serving_shaping.run_cluster, ()),   # multiprocess cluster dispatch
         (serving_shaping.run_pd, ()),        # prefill/decode disaggregation
         (roofline_report.run, ()),

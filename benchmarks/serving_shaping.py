@@ -446,6 +446,83 @@ def run_prefix_cache(arch: str = "qwen2-7b", smoke: bool = True,
             _note(name, m, extra)
 
 
+def run_kv_quant(arch: str = "qwen2-7b", smoke: bool = True,
+                 n_requests: int = 48, total_slots: int = 16,
+                 prompt_len: int = 32, gen: int = 16):
+    """The bandwidth-reduction scenario: KV layout {fp32, int8,
+    int8+sparse} x policy {none, demand}, P=4 wave-granular on the event
+    clock, identical request loads.
+
+    Quantized pages shrink every decode step's KV stream ~4x in the
+    attention term; with the pipe oversubscribed by the fleet's decode
+    demand, the contention timeline stretches the reduced-traffic spans
+    less, so the savings surface as *virtual throughput* (asserted: int8
+    beats fp32 per policy) — the same statistical mechanism as the paper's
+    demand shaping, applied to the numerator instead of the stagger.  The
+    demand policy repriced from the packed layout must keep shaping: its
+    trimmed bw-demand std stays below the ungated int8 fleet's (asserted).
+    Blockwise-sparse cells ride along (keep = 1 - threshold pricing) to
+    show the two reductions compose."""
+    cfg = get_config(arch, smoke=smoke)
+    bw = phase_balanced_bandwidth(cfg, total_slots=total_slots,
+                                  prompt_len=prompt_len, gen=gen)
+    P, slots = 4, max(total_slots // 4, 1)
+    trim = 1.5 * _wave_time(cfg, partitions=P, total_slots=total_slots,
+                            prompt_len=prompt_len, gen=gen)
+    LAYOUTS = [("fp32", "fp32", 0.0), ("int8", "int8", 0.0),
+               ("int8_sp20", "int8", 0.2)]
+
+    def cell(policy, kv_dtype, threshold):
+        rng = np.random.default_rng(0)
+        queue = RequestQueue()
+        for _ in range(n_requests):
+            queue.submit(rng.integers(1, cfg.vocab, size=(prompt_len,))
+                         .astype(np.int32), gen)
+        engines = [SimulatedEngine(cfg, slots=slots,
+                                   max_len=prompt_len + 4 * gen, pid=p,
+                                   peak_flops=hw.TPU_PEAK_FLOPS / P,
+                                   wave_only=True, kv_dtype=kv_dtype,
+                                   sparse_threshold=threshold)
+                   for p in range(P)]
+        sched = make_scheduler(engines, queue, policy=policy,
+                               bandwidth=bw, clock="event")
+        t0 = time.perf_counter()
+        m = sched.run()
+        us = (time.perf_counter() - t0) * 1e6
+        assert len(queue.completed) == n_requests, \
+            f"kv-quant cell served {len(queue.completed)}/{n_requests}"
+        return m, us
+
+    cells = {(policy, tag): cell(policy, kv, thr)
+             for policy in ("none", "demand")
+             for tag, kv, thr in LAYOUTS}
+    for policy in ("none", "demand"):
+        tok_fp32 = cells[(policy, "fp32")][0].throughput()
+        tok_int8 = cells[(policy, "int8")][0].throughput()
+        assert tok_int8 > tok_fp32, \
+            (f"int8 KV lost virtual throughput at P={P} ({policy}): "
+             f"{tok_int8:.4g} <= {tok_fp32:.4g}")
+    std = {p: cells[(p, "int8")][0].bw_stats(trim=trim)[1]
+           for p in ("none", "demand")}
+    shaping_rel = std["demand"] / max(std["none"], 1e-15)
+    assert shaping_rel < 1.0, \
+        (f"demand stopped shaping on the packed layout: trimmed std "
+         f"ratio {shaping_rel:.3f}")
+    for (policy, tag), (m, us) in cells.items():
+        m_fp32 = cells[(policy, "fp32")][0]
+        tok_rel = m.throughput() / m_fp32.throughput()
+        extra = {"kv_layout": tag,
+                 "tok_s_rel_vs_fp32": tok_rel,
+                 "bw_std_trimmed": m.bw_stats(trim=trim)[1]}
+        if tag == "int8" and policy == "demand":
+            extra["demand_std_rel_vs_none"] = shaping_rel
+        name = f"serving_kv_quant.{cfg.name}.P{P}.{policy}.{tag}"
+        record(name, us,
+               f"tok_s_rel_vs_fp32={tok_rel:.3f};"
+               f"bw_std_trimmed={extra['bw_std_trimmed']:.4g}")
+        _note(name, m, extra)
+
+
 def run_cluster(arch: str = "qwen2-7b", smoke: bool = True,
                 n_requests: int = 48, total_slots: int = 16,
                 prompt_len: int = 32, gen: int = 16,
@@ -638,6 +715,9 @@ def main(argv=None):
     run_prefix_cache(args.arch, smoke=args.smoke, n_requests=n_req,
                      total_slots=args.slots, prompt_len=args.prompt_len,
                      gen=args.gen)
+    run_kv_quant(args.arch, smoke=args.smoke, n_requests=n_req,
+                 total_slots=args.slots, prompt_len=args.prompt_len,
+                 gen=args.gen)
     if not args.no_cluster:
         run_cluster(args.arch, smoke=args.smoke, n_requests=n_req,
                     total_slots=args.slots, prompt_len=args.prompt_len,

@@ -261,10 +261,20 @@ def lm_layer_traces(cfg: ModelConfig, seq: int, dtype_bytes: int = 2):
     return out
 
 
-def decode_kv_bytes(cfg: ModelConfig, ctx: int, dtype_bytes: int = 2) -> float:
+def decode_kv_bytes(cfg: ModelConfig, ctx: int, dtype_bytes: int = 2, *,
+                    kv_dtype_bytes: float = None,
+                    kv_keep: float = 1.0) -> float:
     """Per-sequence cache bytes touched by ONE decode step: the whole KV
     cache (or SSM state) is re-read every token, which is what makes decode
-    the bandwidth-bound serving phase (the BN analogue for LM scheduling)."""
+    the bandwidth-bound serving phase (the BN analogue for LM scheduling).
+
+    ``kv_dtype_bytes`` reprices the *attention KV* term for a quantized
+    pool layout (int8/fp8 pages move 1 byte/element instead of the model
+    dtype's); ``kv_keep`` scales the same term for blockwise-sparse decode
+    (the fraction of KV blocks actually read).  Neither touches the SSM
+    recurrent-state term — that state is not paged KV.  The defaults
+    (``None`` -> the model dtype, keep 1.0) are bit-for-bit the historical
+    pricing."""
     L = cfg.n_layers
     by = 0.0
     if cfg.family != "ssm":
@@ -275,7 +285,8 @@ def decode_kv_bytes(cfg: ModelConfig, ctx: int, dtype_bytes: int = 2) -> float:
             eff_ctx = full * ctx + (L - full) * w_eff
         else:
             eff_ctx = L * ctx
-        by += 2.0 * cfg.n_kv_heads * hd * dtype_bytes * eff_ctx
+        kb = dtype_bytes if kv_dtype_bytes is None else kv_dtype_bytes
+        by += 2.0 * cfg.n_kv_heads * hd * kb * eff_ctx * kv_keep
     if cfg.family in ("ssm", "hybrid"):
         # recurrent state read + write per layer
         by += 2.0 * L * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state \

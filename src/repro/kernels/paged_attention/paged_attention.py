@@ -105,3 +105,184 @@ def paged_decode_pallas(q, k_pages, v_pages, tables, cur_pos, *,
         interpret=interpret,
     )(tables, cur, qg, k_pages, v_pages)
     return out.reshape(B, Hq, D)
+
+
+def _pa_quant_kernel(tables_ref, cur_ref, q_ref, k_ref, v_ref, ks_ref,
+                     vs_ref, o_ref, m_ref, l_ref, acc_ref, *, n_t: int,
+                     bs: int, window: int):
+    """Quantized-layout variant: k/v blocks arrive packed (int8/fp8) with
+    their per-(block, kv-head) scale in a (1, 1) side operand; the dequant
+    multiply happens here in VMEM, so HBM only ever moves packed bytes."""
+    b = pl.program_id(0)
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cur = cur_ref[b]
+    q = q_ref[0, 0].astype(jnp.float32)                    # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32) * ks_ref[0, 0]  # (bs, D) dequant
+    v = v_ref[0, :, 0].astype(jnp.float32) * vs_ref[0, 0]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (G, bs)
+    k_pos = t * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+    ok = k_pos <= cur
+    if window > 0:
+        ok &= k_pos > (cur - window)
+    s = jnp.where(ok[None, :], s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(t == n_t - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_quant_pallas(q, k_pages, v_pages, k_scales, v_scales,
+                              tables, cur_pos, *, window: int = 0,
+                              interpret: bool = False):
+    """Quantized paged decode: pages (N, bs, Hkv, D) packed int8/fp8,
+    scales (N, Hkv) f32.  Same grid and streaming structure as the dense
+    kernel; each block's scale rides along through the same block-table
+    index map, so the gather stays one DMA per (slot, head, block)."""
+    B, Hq, D = q.shape
+    _, bs, Hkv, _ = k_pages.shape
+    T = tables.shape[1]
+    assert Hq % Hkv == 0
+    G = Hq // Hkv
+
+    qg = (q.reshape(B, Hkv, G, D) / math.sqrt(D)).astype(q.dtype)
+    tables = jnp.asarray(tables, jnp.int32)
+    cur = jnp.asarray(cur_pos, jnp.int32).reshape(B)
+
+    kernel = functools.partial(_pa_quant_kernel, n_t=T, bs=bs, window=window)
+    page_spec = pl.BlockSpec((1, bs, 1, D),
+                             lambda b, h, t, tbl, cur: (tbl[b, t], 0, h, 0))
+    scale_spec = pl.BlockSpec((1, 1),
+                              lambda b, h, t, tbl, cur: (tbl[b, t], h))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, T),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, t, tbl, cur: (b, h, 0, 0)),
+            page_spec, page_spec, scale_spec, scale_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, t, tbl, cur: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(tables, cur, qg, k_pages, v_pages,
+      jnp.asarray(k_scales, jnp.float32), jnp.asarray(v_scales, jnp.float32))
+    return out.reshape(B, Hq, D)
+
+
+def _pa_sparse_kernel(tables_ref, cur_ref, keep_ref, q_ref, k_ref, v_ref,
+                      o_ref, m_ref, l_ref, acc_ref, *, n_t: int, bs: int,
+                      window: int):
+    """Blockwise-sparse variant: ``keep`` (B, Hkv, T) rides in as a third
+    scalar-prefetch operand.  A dropped block's DMA is redirected to the
+    null block by the index map (``tbl * keep``) and its positions are
+    masked here, so it contributes neither bytes nor probability mass."""
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cur = cur_ref[b]
+    q = q_ref[0, 0]          # (G, D)
+    k = k_ref[0, :, 0]       # (bs, D)
+    v = v_ref[0, :, 0]       # (bs, D)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (G, bs)
+    k_pos = t * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+    ok = k_pos <= cur
+    if window > 0:
+        ok &= k_pos > (cur - window)
+    ok &= keep_ref[b, h, t] > 0
+    s = jnp.where(ok[None, :], s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(t == n_t - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_sparse_pallas(q, k_pages, v_pages, tables, cur_pos, keep, *,
+                               window: int = 0, interpret: bool = False):
+    """Blockwise-sparse paged decode.  ``keep``: (B, Hkv, T) bool/int mask
+    from ``ref.block_keep_mask`` — the selection is computed once outside
+    (ref and kernel share it) and this kernel only skips the dropped
+    blocks' reads."""
+    B, Hq, D = q.shape
+    _, bs, Hkv, _ = k_pages.shape
+    T = tables.shape[1]
+    assert Hq % Hkv == 0
+    G = Hq // Hkv
+
+    qg = (q.reshape(B, Hkv, G, D) / math.sqrt(D)).astype(q.dtype)
+    tables = jnp.asarray(tables, jnp.int32)
+    cur = jnp.asarray(cur_pos, jnp.int32).reshape(B)
+    keep = jnp.asarray(keep, jnp.int32)
+
+    kernel = functools.partial(_pa_sparse_kernel, n_t=T, bs=bs, window=window)
+    # dropped blocks read the null block (id 0): tiny, cache-hot, masked out
+    page_spec = pl.BlockSpec(
+        (1, bs, 1, D),
+        lambda b, h, t, tbl, cur, kp: (tbl[b, t] * kp[b, h, t], 0, h, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, Hkv, T),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda b, h, t, tbl, cur, kp: (b, h, 0, 0)),
+            page_spec, page_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, t, tbl, cur, kp: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(tables, cur, keep, qg, k_pages, v_pages)
+    return out.reshape(B, Hq, D)

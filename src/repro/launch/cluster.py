@@ -80,6 +80,21 @@ def build_cluster_args(ap: argparse.ArgumentParser) -> None:
                          "docs/prefix_caching.md).  Caches are per "
                          "engine/worker.  Requires the paged pool "
                          "(incompatible with --dense)")
+    ap.add_argument("--kv-dtype", default="fp32",
+                    choices=["fp32", "int8", "fp8"],
+                    help="KV pool element layout: 'int8'/'fp8' pack pages "
+                         "with per-(block, kv-head) scales, quartering the "
+                         "decode KV stream vs fp32; the cost model prices "
+                         "the reduced traffic (see docs/kv_quantization.md)."
+                         "  Requires the paged pool (incompatible with "
+                         "--dense)")
+    ap.add_argument("--sparse-threshold", type=float, default=0.0,
+                    metavar="T",
+                    help="blockwise-sparse paged attention: skip KV blocks "
+                         "whose estimated attention mass falls below T "
+                         "(in [0, 1); 0 disables).  The block holding the "
+                         "current token is always read.  Requires the "
+                         "paged pool (incompatible with --dense)")
 
 
 def validate_cluster_args(ap: argparse.ArgumentParser, args) -> None:
@@ -96,6 +111,19 @@ def validate_cluster_args(ap: argparse.ArgumentParser, args) -> None:
     if getattr(args, "prefix_cache", False) and getattr(args, "dense", False):
         ap.error("--prefix-cache shares KV *blocks* and needs the paged "
                  "pool; it cannot be combined with --dense")
+    if not 0.0 <= args.sparse_threshold < 1.0:
+        ap.error(f"--sparse-threshold must be in [0, 1) (got "
+                 f"{args.sparse_threshold}): it is a per-block attention-"
+                 "mass cutoff and >= 1 would drop every block")
+    if getattr(args, "dense", False):
+        if args.kv_dtype != "fp32":
+            ap.error("--kv-dtype int8/fp8 packs paged KV *blocks* and "
+                     "needs the paged pool; it cannot be combined with "
+                     "--dense")
+        if args.sparse_threshold > 0.0:
+            ap.error("--sparse-threshold skips paged KV *blocks* and "
+                     "needs the paged pool; it cannot be combined with "
+                     "--dense")
     if args.pd_split is not None:
         if args.router != "pd":
             ap.error(f"--pd-split only applies to --router pd "
@@ -117,7 +145,8 @@ def run_cluster(*, arch: str, smoke: bool, workers: int, slots: int,
                 dense: bool = False, heartbeat_timeout: float = 60.0,
                 max_queue=None, deadline=None, seed: int = 0,
                 quiet: bool = False, cost_model: str = "analytic",
-                profile=None, pd_split=None, prefix_cache: bool = False):
+                profile=None, pd_split=None, prefix_cache: bool = False,
+                kv_dtype: str = "fp32", sparse_threshold: float = 0.0):
     """Build the request load + worker fleet, run it, print the summary.
     Returns (controller, metrics)."""
     if profile is not None and cost_model != "measured":
@@ -161,6 +190,10 @@ def run_cluster(*, arch: str, smoke: bool, workers: int, slots: int,
     if prefix_cache and dense:
         raise ValueError("prefix_cache shares KV blocks and needs the "
                          "paged pool; it cannot be combined with dense")
+    if (kv_dtype != "fp32" or sparse_threshold > 0.0) and dense:
+        raise ValueError("kv quantization / blockwise-sparse attention "
+                         "live in the paged block pool; they cannot be "
+                         "combined with dense")
 
     def estimate(req):
         # req.cached_len is 0 controller-side (worker pools are remote, so
@@ -186,7 +219,8 @@ def run_cluster(*, arch: str, smoke: bool, workers: int, slots: int,
         paged=False if dense else None, seed=seed,
         cost_model=cost_model,
         profile=str(profile) if profile is not None else None,
-        prefix_cache=prefix_cache)
+        prefix_cache=prefix_cache, kv_dtype=kv_dtype,
+        sparse_threshold=sparse_threshold)
     ctl = make_cluster(specs, queue, transport=transport, router=router_arg,
                        bandwidth=bandwidth,
                        heartbeat_timeout=heartbeat_timeout)
@@ -204,6 +238,7 @@ def run_cluster(*, arch: str, smoke: bool, workers: int, slots: int,
               f"transport={transport} slots={workers}x{slots} "
               f"cost_model={cost_model} "
               f"prefix_cache={'on' if prefix_cache else 'off'} "
+              f"kv={kv_dtype} sparse={sparse_threshold:g} "
               f"completed={s['requests_completed']}/{queue.n_submitted} "
               f"rejected={queue.n_rejected} requeued={queue.n_requeued} "
               f"failovers={ctl.n_failovers}")
@@ -260,7 +295,9 @@ def main(argv=None):
                 heartbeat_timeout=args.heartbeat_timeout,
                 max_queue=args.max_queue, deadline=args.deadline,
                 cost_model=args.cost_model, profile=args.profile,
-                pd_split=args.pd_split, prefix_cache=args.prefix_cache)
+                pd_split=args.pd_split, prefix_cache=args.prefix_cache,
+                kv_dtype=args.kv_dtype,
+                sparse_threshold=args.sparse_threshold)
 
 
 if __name__ == "__main__":

@@ -28,6 +28,13 @@ pool: shared prompt prefixes reference-share resident blocks, only the
 divergent tail is priced as prefill, and admission control probes the
 fleet's caches so deadline feasibility reflects the post-hit service time
 — see ``docs/prefix_caching.md``.
+
+``--kv-dtype int8`` (or ``fp8``) packs the paged KV pool with per-(block,
+kv-head) scales and ``--sparse-threshold T`` skips KV blocks below an
+estimated attention-mass cutoff; both shrink the decode KV stream and flow
+through the cost model so the demand-shaping rule prices the reduced
+traffic — see ``docs/kv_quantization.md``.  Both require the paged pool
+(incompatible with ``--dense``).
 """
 from __future__ import annotations
 
@@ -135,7 +142,8 @@ def main(argv=None):
             heartbeat_timeout=args.heartbeat_timeout,
             max_queue=args.max_queue, deadline=args.deadline,
             cost_model=args.cost_model, profile=args.profile,
-            pd_split=args.pd_split, prefix_cache=args.prefix_cache)
+            pd_split=args.pd_split, prefix_cache=args.prefix_cache,
+            kv_dtype=args.kv_dtype, sparse_threshold=args.sparse_threshold)
         return [r.tokens for r in ctl.queue.completed]
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -151,8 +159,10 @@ def main(argv=None):
     # without one = live calibration (saved to --profile at exit, if set).
     cost_model = None  # None -> engines default to AnalyticCostModel
     if args.cost_model == "measured":
-        cost_model = make_cost_model("measured", cfg, peak_per_part,
-                                     profile=args.profile)
+        cost_model = make_cost_model(
+            "measured", cfg, peak_per_part, profile=args.profile,
+            kv_dtype=args.kv_dtype,
+            sparse_keep=1.0 - args.sparse_threshold)
     max_len = args.prompt_len + 4 * args.gen + (cfg.n_meta_tokens or 0) + \
         (cfg.n_img_tokens or 0)
 
@@ -166,7 +176,12 @@ def main(argv=None):
     # one shared jitted fn per phase: same shapes across engines -> one
     # compiled executable for the whole fleet
     if paged:
-        decode_fn = jax.jit(api.decode_paged, donate_argnums=(2,))
+        pg = api.decode_paged
+        if args.sparse_threshold > 0.0:
+            from functools import partial
+            pg = partial(api.decode_paged,
+                         sparse_threshold=args.sparse_threshold)
+        decode_fn = jax.jit(pg, donate_argnums=(2,))
     else:
         decode_fn = jax.jit(api.decode, donate_argnums=(2,))
     if cfg.family == "encdec":
@@ -184,15 +199,22 @@ def main(argv=None):
                                decode_fn=decode_fn, prefill_fn=prefill_fn,
                                prefill_uniform_fn=prefill_uniform_fn,
                                cost_model=cost_model,
-                               prefix_cache=args.prefix_cache)
+                               prefix_cache=args.prefix_cache,
+                               kv_dtype=args.kv_dtype,
+                               sparse_threshold=args.sparse_threshold)
                for p in range(P)]
 
     # --- request load + admission control ---
+    from repro.profiling.cost_model import KV_PRICE_BYTES
+    kv_price = KV_PRICE_BYTES.get(args.kv_dtype)
+    kv_keep = 1.0 - args.sparse_threshold
+
     def estimate(req):
         pre = prefill_cost(cfg, slots, req.prompt_len, peak_per_part,
-                           cached=req.cached_len)
+                           cached=req.cached_len, kv_dtype_bytes=kv_price)
         dec = decode_cost(cfg, slots, req.prompt_len + args.gen // 2,
-                          peak_per_part)
+                          peak_per_part, kv_dtype_bytes=kv_price,
+                          kv_keep=kv_keep)
         return pre.duration + req.max_new_tokens * dec.duration
 
     # the probe answers "how much of this prompt is already resident
@@ -218,6 +240,7 @@ def main(argv=None):
     s = m.summary()
     print(f"serve: {cfg.name} P={P} stagger={args.stagger} "
           f"clock={args.clock} cost_model={args.cost_model} "
+          f"kv={args.kv_dtype} sparse={args.sparse_threshold:g} "
           f"slots={P}x{slots} completed={s['requests_completed']}"
           f"/{queue.n_submitted} rejected={queue.n_rejected}")
     if cost_model is not None:

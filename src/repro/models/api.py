@@ -80,8 +80,9 @@ def _build_lm(cfg: ModelConfig) -> ModelAPI:
     def decode(params, token, cache):
         return TF.decode_step(params, cfg, token, cache)
 
-    def decode_paged(params, token, pcache):
-        return TF.decode_step_paged(params, cfg, token, pcache)
+    def decode_paged(params, token, pcache, *, sparse_threshold=0.0):
+        return TF.decode_step_paged(params, cfg, token, pcache,
+                                    sparse_threshold=sparse_threshold)
 
     def init_cache(batch, max_len):
         return TF.init_cache(cfg, batch, max_len)

@@ -217,13 +217,16 @@ def naive_attention(q, k, v, *, causal=True, window=None, q_offset=0):
     return o.reshape(B, Sq, Hq, D).astype(q.dtype)
 
 
-def decode_attention(q, k_cache, v_cache, cur_pos, *, window=None):
+def decode_attention(q, k_cache, v_cache, cur_pos, *, window=None,
+                     head_keep=None):
     """Single-token attention against a (possibly longer) cache.
 
     q: (B, 1, Hq, D); caches: (B, S, Hkv, D); cur_pos: () or (B,) int32 —
     0-indexed position of each slot's current token (cache entries
     [0, cur_pos[b]] are valid; a vector gives every slot its own context
     length, the masked-attention half of per-slot continuous batching).
+    ``head_keep`` (optional, (B, Hkv, S) bool) masks positions per kv-head
+    on top of the causal/window mask (the blockwise-sparse paged path).
     """
     B, _, Hq, D = q.shape
     _, S, Hkv, _ = k_cache.shape
@@ -237,7 +240,10 @@ def decode_attention(q, k_cache, v_cache, cur_pos, *, window=None):
     weff = _window_len(window)
     if weff is not None:
         ok &= pos[None, :] > (cur - weff)
-    s = jnp.where(ok[:, None, None, :], s, _NEG)
+    mask = ok[:, None, None, :]
+    if head_keep is not None:
+        mask = mask & head_keep[:, :, None, :]
+    s = jnp.where(mask, s, _NEG)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
                    preferred_element_type=jnp.float32)
@@ -348,7 +354,8 @@ def attention_decode_slice(p, cfg, x, cache, cur_pos, *, window=None):
 
 
 def attention_decode_paged(p, cfg, x, k_pages, v_pages, tables, cur_pos, *,
-                           window=None):
+                           window=None, k_scales=None, v_scales=None,
+                           sparse_threshold=0.0):
     """Decode attention against one layer's paged KV pool.
 
     x: (B, 1, d); pages: (N, bs, Hkv, D); tables: (B, T) int32 block ids
@@ -361,15 +368,35 @@ def attention_decode_paged(p, cfg, x, k_pages, v_pages, tables, cur_pos, *,
     row into the pool — block ``tables[b, cur//bs]``, offset ``cur % bs`` —
     so the layer-stacked pool slab never round-trips through this function
     (the paged analogue of ``attention_decode_slice``).
+
+    ``k_scales``/``v_scales`` ((N, Hkv) f32) mark a quantized pool layout:
+    packed int8/fp8 pages are dequantized on the gather.  A positive
+    ``sparse_threshold`` (static) drops whole KV blocks whose estimated
+    attention mass falls below it — selection comes from the kernel
+    oracle's ``block_keep_mask`` so model path and kernel agree.
     """
     B = x.shape[0]
     _, bs, Hkv, D = k_pages.shape
     T = tables.shape[1]
     cur = jnp.asarray(cur_pos, jnp.int32)
     q, k, v = attention_qkv(p, cfg, x, cur[:, None])
-    kd = _cache_write(k_pages[tables].reshape(B, T * bs, Hkv, D), k, cur)
-    vd = _cache_write(v_pages[tables].reshape(B, T * bs, Hkv, D), v, cur)
-    o = decode_attention(q, kd, vd, cur, window=window)
+    if k_scales is not None:
+        kg = (k_pages[tables].astype(jnp.float32)
+              * k_scales[tables][:, :, None, :, None]).astype(k.dtype)
+        vg = (v_pages[tables].astype(jnp.float32)
+              * v_scales[tables][:, :, None, :, None]).astype(v.dtype)
+    else:
+        kg, vg = k_pages[tables], v_pages[tables]
+    kd = _cache_write(kg.reshape(B, T * bs, Hkv, D), k, cur)
+    vd = _cache_write(vg.reshape(B, T * bs, Hkv, D), v, cur)
+    head_keep = None
+    if sparse_threshold:
+        from repro.kernels.paged_attention.ref import block_keep_mask
+        keep = block_keep_mask(q[:, 0], k_pages, tables, cur,
+                               threshold=sparse_threshold, window=window,
+                               k_scales=k_scales)
+        head_keep = jnp.repeat(keep, bs, axis=-1)     # (B, Hkv, T*bs)
+    o = decode_attention(q, kd, vd, cur, window=window, head_keep=head_keep)
     return o.reshape(B, 1, -1) @ p["wo"], (k, v)
 
 

@@ -338,27 +338,41 @@ def decode_step(params, cfg, token, cache):
     return logits, new_cache
 
 
-def decode_step_paged(params, cfg, token, pcache):
+def decode_step_paged(params, cfg, token, pcache, *, sparse_threshold=0.0):
     """One decode step against a paged (block-table) KV pool.
 
     token: (B, 1) int32.  pcache:
       k_pages/v_pages : (L, N, bs, Hkv, D) shared block pool
       tables          : (B, T) int32 per-slot block chains (null-padded)
       lens            : (B,) int32 per-slot write positions
+      k_scales/v_scales (quantized pools): (L, N, Hkv) f32 per-(block,
+        kv-head) scales; their presence marks packed int8/fp8 pages
       ssm_state/ssm_conv (families with SSM): per-slot as in the dense cache
     Same math as ``decode_step`` on the dense gather of each slot's chain —
-    the equivalence the engine test suite pins down.  Returns
-    (logits (B, 1, V) f32, new pcache) with every ``lens`` advanced by one
-    (the engine overrides lengths for inactive slots from host bookkeeping).
+    the equivalence the engine test suite pins down.  On a quantized pool
+    the append is a per-layer read-modify-write: each slot's current block
+    is dequantized, the new row set, and the whole (bs, D) tile requantized
+    with a fresh scale (per-step re-rounding error stays bounded by
+    ``scale / 2`` per element; see docs/kv_quantization.md).  A positive
+    ``sparse_threshold`` (static) makes attention skip low-mass KV blocks.
+    Returns (logits (B, 1, V) f32, new pcache) with every ``lens`` advanced
+    by one (the engine overrides lengths for inactive slots from host
+    bookkeeping).
     """
     x = pbatch(params["embed"][token])  # (B,1,d)
     B = x.shape[0]
     pos = jnp.asarray(pcache["lens"], jnp.int32)
     tables = jnp.asarray(pcache["tables"], jnp.int32)
     windows = jnp.asarray(layer_windows(cfg))
+    quant = "k_scales" in pcache
+    if quant:
+        # lazy: serving imports models, so models must not import serving
+        # at module scope
+        from repro.serving.kv_pool import dequantize_kv, quantize_kv
+        kv_name = "int8" if pcache["k_pages"].dtype == jnp.int8 else "fp8"
 
     def body(carry, xs):
-        x, kp_all, vp_all = carry
+        x, kp_all, vp_all, ks_all, vs_all = carry
         bp, win, li, st, cv = xs
         h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
         delta = 0.0
@@ -366,16 +380,35 @@ def decode_step_paged(params, cfg, token, pcache):
         if has_attn(cfg):
             kp = lax.dynamic_index_in_dim(kp_all, li, 0, keepdims=False)
             vp = lax.dynamic_index_in_dim(vp_all, li, 0, keepdims=False)
+            ks = vs = None
+            if quant:
+                ks = lax.dynamic_index_in_dim(ks_all, li, 0, keepdims=False)
+                vs = lax.dynamic_index_in_dim(vs_all, li, 0, keepdims=False)
             a_out, (k_new, v_new) = L.attention_decode_paged(
-                bp["attn"], cfg, h, kp, vp, tables, pos, window=win)
+                bp["attn"], cfg, h, kp, vp, tables, pos, window=win,
+                k_scales=ks, v_scales=vs, sparse_threshold=sparse_threshold)
             # persist only each slot's new row into its current block (a
             # per-slot scatter; the pool slab never round-trips per layer)
             bs = kp_all.shape[2]
             blk = jnp.take_along_axis(
                 tables, jnp.clip(pos // bs, 0, tables.shape[1] - 1)[:, None],
                 axis=1)[:, 0]
-            kp_all = kp_all.at[li, blk, pos % bs].set(k_new[:, 0])
-            vp_all = vp_all.at[li, blk, pos % bs].set(v_new[:, 0])
+            if quant:
+                # read-modify-write requant of each slot's current block
+                row = jnp.arange(B)
+                kf = dequantize_kv(kp[blk], ks[blk])        # (B, bs, Hkv, D)
+                vf = dequantize_kv(vp[blk], vs[blk])
+                kf = kf.at[row, pos % bs].set(k_new[:, 0].astype(kf.dtype))
+                vf = vf.at[row, pos % bs].set(v_new[:, 0].astype(vf.dtype))
+                kq, ksb = quantize_kv(kf, kv_name)
+                vq, vsb = quantize_kv(vf, kv_name)
+                kp_all = kp_all.at[li, blk].set(kq)
+                vp_all = vp_all.at[li, blk].set(vq)
+                ks_all = ks_all.at[li, blk].set(ksb)
+                vs_all = vs_all.at[li, blk].set(vsb)
+            else:
+                kp_all = kp_all.at[li, blk, pos % bs].set(k_new[:, 0])
+                vp_all = vp_all.at[li, blk, pos % bs].set(v_new[:, 0])
             delta = delta + a_out
         if has_ssm(cfg):
             s_out, sc = SSM.ssm_decode(bp["ssm"], cfg, h,
@@ -393,19 +426,21 @@ def decode_step_paged(params, cfg, token, pcache):
         elif "mlp" in bp:
             h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
             x = x + L.mlp_block(bp["mlp"], h, cfg.act)
-        return (x, kp_all, vp_all), (new_st, new_cv)
+        return (x, kp_all, vp_all, ks_all, vs_all), (new_st, new_cv)
 
     Lc = cfg.n_layers
     dummy = jnp.zeros((Lc, 0), _dtype(cfg))
     dummy2 = jnp.zeros((0,), _dtype(cfg))
     kp = pcache.get("k_pages", dummy2)
     vp = pcache.get("v_pages", dummy2)
+    ks = pcache.get("k_scales", dummy2)
+    vs = pcache.get("v_scales", dummy2)
     st = pcache.get("ssm_state", dummy)
     cv = pcache.get("ssm_conv", dummy)
     lidx = jnp.arange(Lc, dtype=jnp.int32)
 
-    (x, nkp, nvp), (nst, ncv) = lax.scan(
-        body, (x, kp, vp), (params["blocks"], windows, lidx, st, cv))
+    (x, nkp, nvp, nks, nvs), (nst, ncv) = lax.scan(
+        body, (x, kp, vp, ks, vs), (params["blocks"], windows, lidx, st, cv))
 
     x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
@@ -414,6 +449,8 @@ def decode_step_paged(params, cfg, token, pcache):
     new_pcache = dict(pcache)
     if has_attn(cfg):
         new_pcache["k_pages"], new_pcache["v_pages"] = nkp, nvp
+        if quant:
+            new_pcache["k_scales"], new_pcache["v_scales"] = nks, nvs
     if has_ssm(cfg):
         new_pcache["ssm_state"], new_pcache["ssm_conv"] = nst, ncv
     new_pcache["lens"] = pos + 1

@@ -56,6 +56,21 @@ from repro.profiling.timer import PhaseTimer, shape_key
 PROFILE_VERSION = 1
 COST_MODELS = ("analytic", "measured")
 
+# Pricing-side byte width of one KV-cache element per pool layout.  ``None``
+# means "the model's own dtype_bytes" — the unquantized layout and the exact
+# historical pricing.  Kept here (not imported from ``serving.kv_pool``,
+# which owns the same names on the storage side) so pricing never pulls in
+# the serving package.  See ``docs/kv_quantization.md``.
+KV_PRICE_BYTES = {"fp32": None, "int8": 1, "fp8": 1}
+
+
+def _check_kv_pricing(kv_dtype: str, sparse_keep: float) -> None:
+    if kv_dtype not in KV_PRICE_BYTES:
+        raise ValueError(f"kv_dtype must be one of "
+                         f"{sorted(KV_PRICE_BYTES)}, got {kv_dtype!r}")
+    if not 0.0 < sparse_keep <= 1.0:
+        raise ValueError(f"sparse_keep must be in (0, 1], got {sparse_keep}")
+
 
 # ---------------------------------------------------------------------------
 # the cost record
@@ -113,21 +128,37 @@ def _eff_len(prompt_len: int, cached: int) -> int:
     return max(int(prompt_len) - max(int(cached), 0), 1)
 
 
+def _kv_write_delta(cfg: ModelConfig, total_tokens: float, dtype_bytes: int,
+                    kv_dtype_bytes) -> float:
+    """Byte adjustment to a prefill's traffic when its KV-cache *write*
+    lands in a quantized pool: the per-layer K+V rows shrink from the model
+    dtype to ``kv_dtype_bytes`` per element.  Zero (exactly) when the pool
+    stores at model dtype — the historical pricing."""
+    if kv_dtype_bytes is None or cfg.family == "ssm":
+        return 0.0
+    return (2.0 * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim
+            * total_tokens * (float(kv_dtype_bytes) - float(dtype_bytes)))
+
+
 def prefill_cost(cfg: ModelConfig, batch: int, prompt_len: int,
                  peak_flops: float = hw.TPU_PEAK_FLOPS,
-                 dtype_bytes: int = 2, cached: int = 0) -> PhaseCost:
+                 dtype_bytes: int = 2, cached: int = 0, *,
+                 kv_dtype_bytes=None) -> PhaseCost:
     """One prefill wave of ``batch`` equal-length prompts (compute-bound).
     ``cached`` prompt tokens (a prefix-cache hit) are priced as free: only
-    the divergent tail costs FLOPs and traffic."""
-    return _cost_from_traces(_traces(cfg, _eff_len(prompt_len, cached),
-                                     dtype_bytes), batch, peak_flops)
+    the divergent tail costs FLOPs and traffic.  ``kv_dtype_bytes``
+    reprices the KV-cache write for a quantized pool layout."""
+    eff = _eff_len(prompt_len, cached)
+    extra = _kv_write_delta(cfg, eff * batch, dtype_bytes, kv_dtype_bytes)
+    return _cost_from_traces(_traces(cfg, eff, dtype_bytes), batch,
+                             peak_flops, extra_bytes=extra)
 
 
 def prefill_cost_ragged(cfg: ModelConfig, lens: Sequence[int],
                         peak_flops: float = hw.TPU_PEAK_FLOPS,
                         dtype_bytes: int = 2,
-                        cached_lens: Optional[Sequence[int]] = None
-                        ) -> PhaseCost:
+                        cached_lens: Optional[Sequence[int]] = None, *,
+                        kv_dtype_bytes=None) -> PhaseCost:
     """One fused prefill wave over ragged prompt lengths.
 
     FLOPs and activation traffic accumulate per prompt at its own length;
@@ -150,22 +181,31 @@ def prefill_cost_ragged(cfg: ModelConfig, lens: Sequence[int],
             fl += f
             by += tr.act_bytes_per_img * n
             dur += f / (peak_flops * eff)
+    by += _kv_write_delta(cfg, sum(int(l) for l in lens), dtype_bytes,
+                          kv_dtype_bytes)
     return PhaseCost(fl, by + w_by, max(dur, 1e-15))
 
 
 def decode_cost(cfg: ModelConfig, batch: int,
                 ctx: Union[int, Sequence[int]],
                 peak_flops: float = hw.TPU_PEAK_FLOPS,
-                dtype_bytes: int = 2) -> PhaseCost:
+                dtype_bytes: int = 2, *, kv_dtype_bytes=None,
+                kv_keep: float = 1.0) -> PhaseCost:
     """One decode step over ``batch`` slots — the KV-cache read makes this
     the bandwidth-bound phase.  ``ctx`` is either one shared context length
     or a per-slot vector; ragged batches price the KV read as the SUM of
-    per-slot contexts (a shared scalar over- or under-priced them)."""
+    per-slot contexts (a shared scalar over- or under-priced them).
+    ``kv_dtype_bytes`` / ``kv_keep`` reprice the KV read for quantized /
+    blockwise-sparse pool layouts (see ``core.traffic.decode_kv_bytes``)."""
     if np.ndim(ctx) == 0:
-        kv = decode_kv_bytes(cfg, int(ctx), dtype_bytes) * batch
+        kv = decode_kv_bytes(cfg, int(ctx), dtype_bytes,
+                             kv_dtype_bytes=kv_dtype_bytes,
+                             kv_keep=kv_keep) * batch
     else:
         assert len(ctx) == batch, (len(ctx), batch)
-        kv = sum(decode_kv_bytes(cfg, int(c), dtype_bytes) for c in ctx)
+        kv = sum(decode_kv_bytes(cfg, int(c), dtype_bytes,
+                                 kv_dtype_bytes=kv_dtype_bytes,
+                                 kv_keep=kv_keep) for c in ctx)
     return _cost_from_traces(_traces(cfg, 1, dtype_bytes),
                              batch, peak_flops, extra_bytes=kv)
 
@@ -220,25 +260,36 @@ class AnalyticCostModel(CostModel):
 
     def __init__(self, cfg: ModelConfig,
                  peak_flops: float = hw.TPU_PEAK_FLOPS,
-                 dtype_bytes: int = 2):
+                 dtype_bytes: int = 2, *, kv_dtype: str = "fp32",
+                 sparse_keep: float = 1.0):
+        _check_kv_pricing(kv_dtype, sparse_keep)
         self.cfg = cfg
         self.peak_flops = float(peak_flops)
         self.dtype_bytes = int(dtype_bytes)
+        # KV-layout pricing knobs: bytes/element of the paged KV store
+        # (None = model dtype) and the blockwise-sparse read fraction.
+        # Defaults reproduce the historical pricing bit-for-bit.
+        self.kv_dtype = kv_dtype
+        self.sparse_keep = float(sparse_keep)
+        self._kv_bytes = KV_PRICE_BYTES[kv_dtype]
 
     def prefill(self, batch: int, prompt_len: int,
                 cached: int = 0) -> PhaseCost:
         return prefill_cost(self.cfg, batch, prompt_len, self.peak_flops,
-                            self.dtype_bytes, cached)
+                            self.dtype_bytes, cached,
+                            kv_dtype_bytes=self._kv_bytes)
 
     def prefill_ragged(self, lens: Sequence[int],
                        cached_lens: Optional[Sequence[int]] = None
                        ) -> PhaseCost:
         return prefill_cost_ragged(self.cfg, lens, self.peak_flops,
-                                   self.dtype_bytes, cached_lens)
+                                   self.dtype_bytes, cached_lens,
+                                   kv_dtype_bytes=self._kv_bytes)
 
     def decode(self, ctxs: Sequence[int]) -> PhaseCost:
         return decode_cost(self.cfg, len(ctxs), ctxs, self.peak_flops,
-                           self.dtype_bytes)
+                           self.dtype_bytes, kv_dtype_bytes=self._kv_bytes,
+                           kv_keep=self.sparse_keep)
 
 
 class MeasuredCostModel(CostModel):
@@ -264,13 +315,18 @@ class MeasuredCostModel(CostModel):
     def __init__(self, cfg: ModelConfig,
                  peak_flops: float = hw.TPU_PEAK_FLOPS,
                  dtype_bytes: int = 2, *,
-                 timer: Optional[PhaseTimer] = None, blend: float = 1.0):
+                 timer: Optional[PhaseTimer] = None, blend: float = 1.0,
+                 kv_dtype: str = "fp32", sparse_keep: float = 1.0):
         if not 0.0 <= blend <= 1.0:
             raise ValueError(f"blend must be in [0, 1], got {blend}")
-        self.analytic = AnalyticCostModel(cfg, peak_flops, dtype_bytes)
+        self.analytic = AnalyticCostModel(cfg, peak_flops, dtype_bytes,
+                                          kv_dtype=kv_dtype,
+                                          sparse_keep=sparse_keep)
         self.cfg = cfg
         self.peak_flops = float(peak_flops)
         self.dtype_bytes = int(dtype_bytes)
+        self.kv_dtype = kv_dtype
+        self.sparse_keep = float(sparse_keep)
         # a frozen (replay) model has estimates but no live timer; keep the
         # estimate store separate from the observation hook so both modes
         # read through the same path
@@ -339,6 +395,8 @@ def save_profile(model: MeasuredCostModel, path) -> Path:
         "arch": getattr(model.cfg, "name", str(model.cfg)),
         "peak_flops": model.peak_flops,
         "dtype_bytes": model.dtype_bytes,
+        "kv_dtype": model.kv_dtype,
+        "sparse_keep": model.sparse_keep,
         "blend": model.blend,
         "alpha": model._store.alpha,
         "min_samples": model._store.min_samples,
@@ -380,7 +438,9 @@ def load_profile(path, cfg: ModelConfig, *,
         peak_flops=float(peak_flops if peak_flops is not None
                          else doc["peak_flops"]),
         dtype_bytes=int(doc.get("dtype_bytes", 2)),
-        timer=store, blend=float(doc.get("blend", 1.0)))
+        timer=store, blend=float(doc.get("blend", 1.0)),
+        kv_dtype=doc.get("kv_dtype", "fp32"),
+        sparse_keep=float(doc.get("sparse_keep", 1.0)))
     if not live:
         model.timer = None  # frozen: estimates stay, observation hook off
     return model
@@ -389,7 +449,9 @@ def load_profile(path, cfg: ModelConfig, *,
 def make_cost_model(name: str, cfg: ModelConfig,
                     peak_flops: float = hw.TPU_PEAK_FLOPS, *,
                     profile=None, dtype_bytes: int = 2,
-                    blend: Optional[float] = None) -> CostModel:
+                    blend: Optional[float] = None,
+                    kv_dtype: str = "fp32",
+                    sparse_keep: float = 1.0) -> CostModel:
     """One factory for the CLI / WorkerSpec axis.
 
     ``analytic``                    -> the deterministic default;
@@ -399,19 +461,32 @@ def make_cost_model(name: str, cfg: ModelConfig,
     ``blend=None`` means "the profile's saved value" on replay and the
     fully-measured 1.0 for a fresh calibration; an explicit ``blend``
     overrides either (a loaded profile keeps its saved ``dtype_bytes`` —
-    durations were calibrated against that layout)."""
+    durations were calibrated against that layout).  ``kv_dtype`` /
+    ``sparse_keep`` reprice KV traffic for quantized / blockwise-sparse
+    pool layouts; non-default values override a loaded profile's saved
+    layout (bytes are shape arithmetic — the calibrated durations still
+    apply)."""
     if name not in COST_MODELS:
         raise ValueError(f"cost model must be one of {COST_MODELS}, "
                          f"got {name!r}")
+    _check_kv_pricing(kv_dtype, sparse_keep)
     if name == "analytic":
-        return AnalyticCostModel(cfg, peak_flops, dtype_bytes)
+        return AnalyticCostModel(cfg, peak_flops, dtype_bytes,
+                                 kv_dtype=kv_dtype, sparse_keep=sparse_keep)
     if profile is not None and Path(profile).exists():
         model = load_profile(profile, cfg, peak_flops=peak_flops)
         if blend is not None:
             if not 0.0 <= blend <= 1.0:
                 raise ValueError(f"blend must be in [0, 1], got {blend}")
             model.blend = float(blend)
+        if kv_dtype != "fp32" or sparse_keep != 1.0:
+            model.kv_dtype = kv_dtype
+            model.sparse_keep = float(sparse_keep)
+            model.analytic = AnalyticCostModel(
+                cfg, model.peak_flops, model.dtype_bytes,
+                kv_dtype=kv_dtype, sparse_keep=sparse_keep)
         return model
     return MeasuredCostModel(cfg, peak_flops, dtype_bytes,
                              timer=PhaseTimer(),
-                             blend=1.0 if blend is None else blend)
+                             blend=1.0 if blend is None else blend,
+                             kv_dtype=kv_dtype, sparse_keep=sparse_keep)

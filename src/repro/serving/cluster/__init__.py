@@ -46,14 +46,18 @@ def make_worker_specs(arch: str, n_workers: int, *, smoke: bool = True,
                       block_size: int = 16, paged: Optional[bool] = None,
                       seed: int = 0, cost_model: str = "analytic",
                       profile: Optional[str] = None,
-                      prefix_cache: bool = False) -> List[WorkerSpec]:
+                      prefix_cache: bool = False, kv_dtype: str = "fp32",
+                      sparse_threshold: float = 0.0) -> List[WorkerSpec]:
     """One spec per worker; the fleet splits ``peak_flops_total`` evenly
     (the paper's 1/P compute split) and each worker learns the cluster
     width for submesh pinning.  ``cost_model`` / ``profile`` pick each
     worker's phase-pricing source (see ``WorkerSpec``); ``prefix_cache``
     turns on each worker's KV-pool prefix index (per-worker caches — the
     pool is worker-local, so hits depend on the router landing shared
-    prefixes on the same worker)."""
+    prefixes on the same worker).  ``kv_dtype`` / ``sparse_threshold``
+    pick each worker's KV pool layout (packed int8/fp8 pages, blockwise-
+    sparse reads); both flow into the worker's cost model so shaping
+    prices the reduced traffic."""
     return [WorkerSpec(wid=w, arch=arch, smoke=smoke, slots=slots,
                        max_len=max_len,
                        peak_flops=peak_flops_total / n_workers,
@@ -61,7 +65,8 @@ def make_worker_specs(arch: str, n_workers: int, *, smoke: bool = True,
                        block_size=block_size, paged=paged,
                        partitions=n_workers, seed=seed,
                        cost_model=cost_model, profile=profile,
-                       prefix_cache=prefix_cache)
+                       prefix_cache=prefix_cache, kv_dtype=kv_dtype,
+                       sparse_threshold=sparse_threshold)
             for w in range(n_workers)]
 
 

@@ -155,6 +155,8 @@ class WorkerSpec:
     cost_model: str = "analytic"  # phase pricing: "analytic" | "measured"
     profile: Optional[str] = None  # saved calibration profile (replay)
     prefix_cache: bool = False   # per-worker KV-pool prefix index (COW)
+    kv_dtype: str = "fp32"       # KV pool element layout: fp32 | int8 | fp8
+    sparse_threshold: float = 0.0  # blockwise-sparse attention cutoff
 
 
 def _partition_mesh(spec: WorkerSpec):
@@ -180,8 +182,9 @@ def build_engine(spec: WorkerSpec) -> EngineBase:
     from repro.serving.engine import SimulatedEngine
 
     cfg = get_config(spec.arch, smoke=spec.smoke)
-    cost_model = make_cost_model(spec.cost_model, cfg, spec.peak_flops,
-                                 profile=spec.profile)
+    cost_model = make_cost_model(
+        spec.cost_model, cfg, spec.peak_flops, profile=spec.profile,
+        kv_dtype=spec.kv_dtype, sparse_keep=1.0 - spec.sparse_threshold)
     if spec.engine == "sim" and cost_model.timer is not None:
         # a live timer on a SimulatedEngine would fold the Python wall
         # time of synthetic token generation — not device time — into the
@@ -196,7 +199,8 @@ def build_engine(spec: WorkerSpec) -> EngineBase:
     kw = dict(slots=spec.slots, max_len=spec.max_len, pid=spec.wid,
               peak_flops=spec.peak_flops, wave_only=spec.wave_only,
               block_size=spec.block_size, cost_model=cost_model,
-              prefix_cache=spec.prefix_cache)
+              prefix_cache=spec.prefix_cache, kv_dtype=spec.kv_dtype,
+              sparse_threshold=spec.sparse_threshold)
     if spec.engine == "sim":
         return SimulatedEngine(cfg, **kw)
     if spec.engine != "real":

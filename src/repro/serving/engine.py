@@ -43,6 +43,7 @@ from __future__ import annotations
 import math
 import time
 from dataclasses import dataclass, field
+from functools import partial as _partial
 from typing import List, Optional
 
 import numpy as np
@@ -56,8 +57,9 @@ from repro.profiling.cost_model import (AnalyticCostModel,  # noqa: F401
                                         CostModel, PhaseCost, decode_cost,
                                         prefill_cost, prefill_cost_ragged)
 from repro.profiling.timer import shape_key
-from repro.serving.kv_pool import (NULL_BLOCK, BlockPool, ChainAlloc,
-                                   PoolExhausted)
+from repro.serving.kv_pool import (KV_DTYPES, NULL_BLOCK, BlockPool,
+                                   ChainAlloc, PoolExhausted,
+                                   kv_dtype_supported)
 from repro.serving.queue import Request
 
 # model families whose per-sequence state does not live (only) in KV blocks:
@@ -65,6 +67,12 @@ from repro.serving.queue import Request
 # token prefix) and enc-dec has no paged cache at all, so block-level prefix
 # sharing cannot represent a cached prefix for them
 _NO_PREFIX_CACHE_FAMILIES = ("ssm", "hybrid", "encdec")
+
+# families the bandwidth-reduction KV layouts (quantized pages, blockwise-
+# sparse reads) cannot serve: SSM/hybrid recurrent state is not KV blocks
+# (quantizing only the attention half would misprice the hybrid mix) and
+# enc-dec has no paged cache at all
+_NO_KV_QUANT_FAMILIES = ("ssm", "hybrid", "encdec")
 
 
 @dataclass
@@ -119,12 +127,31 @@ class EngineBase:
                  block_size: int = 16, pool_blocks: Optional[int] = None,
                  wave_only: bool = False,
                  cost_model: Optional[CostModel] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, kv_dtype: str = "fp32",
+                 sparse_threshold: float = 0.0):
         if prefix_cache and cfg.family in _NO_PREFIX_CACHE_FAMILIES:
             raise ValueError(
                 f"prefix caching is not supported for the {cfg.family!r} "
                 "family: its per-sequence state is not (only) KV blocks, so "
                 "a shared block chain cannot stand in for a cached prefix")
+        if kv_dtype not in KV_DTYPES:
+            raise ValueError(f"unknown kv_dtype {kv_dtype!r}: expected one "
+                             f"of {KV_DTYPES}")
+        if not kv_dtype_supported(kv_dtype):
+            raise ValueError(
+                f"kv_dtype {kv_dtype!r} is not supported by this jax build "
+                "(no float8_e4m3fn dtype); use 'int8' or 'fp32'")
+        if not 0.0 <= sparse_threshold < 1.0:
+            raise ValueError("sparse_threshold must be in [0, 1) — it is a "
+                             "per-block attention-mass cutoff, and >= 1 "
+                             f"would drop every block (got {sparse_threshold})")
+        if (kv_dtype != "fp32" or sparse_threshold > 0.0) \
+                and cfg.family in _NO_KV_QUANT_FAMILIES:
+            raise ValueError(
+                f"quantized / blockwise-sparse KV is not supported for the "
+                f"{cfg.family!r} family: its per-sequence state is not "
+                "(only) attention KV blocks, so packed pages or block "
+                "skipping cannot represent its cache traffic")
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
@@ -132,11 +159,15 @@ class EngineBase:
         self.peak_flops = peak_flops
         self.block_size = block_size
         self.prefix_cache = bool(prefix_cache)
+        self.kv_dtype = kv_dtype
+        self.sparse_threshold = float(sparse_threshold)
         # phase pricing: analytic by default (bit-for-bit the historical
-        # behaviour); a MeasuredCostModel swaps in on-device durations and
-        # its live timer (if any) is fed by _run_timed below
+        # behaviour for fp32/keep-all; quantized or sparse layouts reprice
+        # the KV-traffic term); a MeasuredCostModel swaps in on-device
+        # durations and its live timer (if any) is fed by _run_timed below
         self.cost_model = cost_model if cost_model is not None \
-            else AnalyticCostModel(cfg, peak_flops)
+            else AnalyticCostModel(cfg, peak_flops, kv_dtype=kv_dtype,
+                                   sparse_keep=1.0 - self.sparse_threshold)
         # shape buckets whose compile-tainted first sample was discarded
         self._timed_warm: set = set()
         # wave-only batching: freed slots wait for the engine to drain and
@@ -259,11 +290,17 @@ class EngineBase:
         else:
             raise KeyError(f"request {rid} is not active on engine "
                            f"{self.pid}")
+        from repro.profiling.cost_model import KV_PRICE_BYTES
+
         dtype_bytes = int(getattr(self.cost_model, "dtype_bytes", 2))
         state = {
             "len": int(self.slot_lens[i]),
-            "kv_bytes": float(decode_kv_bytes(self.cfg, self.slot_lens[i],
-                                              dtype_bytes)),
+            # a quantized pool ships packed pages, so the handoff payload is
+            # priced at the pool's bytes-per-element, not the model dtype's
+            "kv_bytes": float(decode_kv_bytes(
+                self.cfg, self.slot_lens[i], dtype_bytes,
+                kv_dtype_bytes=KV_PRICE_BYTES.get(self.kv_dtype))),
+            "kv_dtype": self.kv_dtype,
             "pages": self._export_slot_state(i),
         }
         self.active[i] = None
@@ -559,11 +596,13 @@ class PartitionEngine(EngineBase):
                  block_size: int = 16, pool_blocks: Optional[int] = None,
                  wave_only: bool = False,
                  cost_model: Optional[CostModel] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, kv_dtype: str = "fp32",
+                 sparse_threshold: float = 0.0):
         super().__init__(cfg, slots=slots, max_len=max_len, pid=pid,
                          peak_flops=peak_flops, block_size=block_size,
                          pool_blocks=pool_blocks, wave_only=wave_only,
-                         cost_model=cost_model, prefix_cache=prefix_cache)
+                         cost_model=cost_model, prefix_cache=prefix_cache,
+                         kv_dtype=kv_dtype, sparse_threshold=sparse_threshold)
         import jax
 
         self.api = api
@@ -575,10 +614,19 @@ class PartitionEngine(EngineBase):
             raise ValueError("prefix caching shares KV *blocks* and needs "
                              "the paged pool (paged=True); the dense "
                              "per-wave slab has no blocks to share")
+        if (self.kv_dtype != "fp32" or self.sparse_threshold > 0.0) \
+                and not self.paged:
+            raise ValueError("kv quantization / blockwise-sparse attention "
+                             "live in the paged block pool (paged=True); "
+                             "the dense per-wave slab has neither packed "
+                             "pages nor block granularity to skip")
         # engines may share jitted phase fns (same shapes -> one executable)
         if self.paged:
-            self._decode_fn = decode_fn or jax.jit(api.decode_paged,
-                                                   donate_argnums=(2,))
+            pg = api.decode_paged
+            if self.sparse_threshold > 0.0:
+                pg = _partial(api.decode_paged,
+                              sparse_threshold=self.sparse_threshold)
+            self._decode_fn = decode_fn or jax.jit(pg, donate_argnums=(2,))
         else:
             self._decode_fn = decode_fn or jax.jit(api.decode,
                                                    donate_argnums=(2,))
@@ -675,7 +723,8 @@ class PartitionEngine(EngineBase):
 
         if self.pages is None:
             self.pages = KV.init_pages(self.cfg, self.pool.n_blocks,
-                                       self.block_size)
+                                       self.block_size,
+                                       kv_dtype=self.kv_dtype)
             if self._has_ssm():
                 st = self.api.init_cache(self.slots, 1)
                 self.pages["ssm_state"] = st["ssm_state"]
@@ -703,10 +752,13 @@ class PartitionEngine(EngineBase):
                 # shared block is never written
                 tables[j, :self.slot_shared[i]] = NULL_BLOCK
             src_a = jnp.asarray(src, jnp.int32)
+            sub = {"k_pages": self.pages["k_pages"],
+                   "v_pages": self.pages["v_pages"]}
+            if "k_scales" in self.pages:
+                sub["k_scales"] = self.pages["k_scales"]
+                sub["v_scales"] = self.pages["v_scales"]
             self.pages.update(KV.write_prefix_pages(
-                {"k_pages": self.pages["k_pages"],
-                 "v_pages": self.pages["v_pages"]},
-                cache["k"][:, src_a], cache["v"][:, src_a],
+                sub, cache["k"][:, src_a], cache["v"][:, src_a],
                 jnp.asarray(tables)))
         if self._has_ssm():
             rows_a = jnp.asarray(rows, jnp.int32)
@@ -784,6 +836,13 @@ class PartitionEngine(EngineBase):
                 tbl = np.asarray(self.slot_tables[i], np.int32)
                 out["k"] = np.asarray(self.pages["k_pages"][:, tbl])
                 out["v"] = np.asarray(self.pages["v_pages"][:, tbl])
+                if "k_scales" in self.pages:
+                    # packed pages travel as-is; ship their scales so the
+                    # importer can rebuild the quantized layout exactly
+                    out["k_scales"] = np.asarray(
+                        self.pages["k_scales"][:, tbl])
+                    out["v_scales"] = np.asarray(
+                        self.pages["v_scales"][:, tbl])
             if self._has_ssm() and self.pages is not None:
                 out["ssm_state"] = np.asarray(self.pages["ssm_state"][:, i])
                 out["ssm_conv"] = np.asarray(self.pages["ssm_conv"][:, i])
@@ -812,6 +871,13 @@ class PartitionEngine(EngineBase):
                         f"handoff carries {pages['k'].shape[1]} blocks but "
                         f"slot {i} allocated {n_blk} (block_size mismatch "
                         "across the fleet?)")
+                if ("k_scales" in pages) != ("k_scales" in self.pages):
+                    raise ValueError(
+                        "KV handoff layout mismatch: donor and receiver "
+                        "must use the same kv_dtype (packed pages carry "
+                        "per-block scales a float pool cannot hold, and "
+                        "float pages cannot be scattered into a packed "
+                        "pool without requantizing)")
                 tbl_np = np.asarray(self.slot_tables[i], np.int32).copy()
                 # blocks re-matched from this engine's own prefix index
                 # already hold the donor's prefix content — mask them out
@@ -823,6 +889,14 @@ class PartitionEngine(EngineBase):
                     jnp.asarray(pages["k"]).astype(kd))
                 self.pages["v_pages"] = self.pages["v_pages"].at[:, tbl].set(
                     jnp.asarray(pages["v"]).astype(kd))
+                if "k_scales" in pages:
+                    sd = self.pages["k_scales"].dtype
+                    self.pages["k_scales"] = \
+                        self.pages["k_scales"].at[:, tbl].set(
+                            jnp.asarray(pages["k_scales"]).astype(sd))
+                    self.pages["v_scales"] = \
+                        self.pages["v_scales"].at[:, tbl].set(
+                            jnp.asarray(pages["v_scales"]).astype(sd))
             if self._has_ssm():
                 for key in ("ssm_state", "ssm_conv"):
                     self.pages[key] = self.pages[key].at[:, i].set(

@@ -342,16 +342,98 @@ class BlockPool:
 # device-side page arrays (jax imported lazily: SimulatedEngine never needs it)
 # ---------------------------------------------------------------------------
 
+# KV storage dtypes the pool understands.  Byte widths are host-side
+# metadata (no jax import) so the cost model can reprice KV traffic without
+# touching a device; "fp32" means "store at the model's own compute dtype"
+# and is the exact historical layout.  Quantized layouts carry one f32
+# scale per (layer, block, kv-head) alongside the packed pages — see
+# ``docs/kv_quantization.md``.
+KV_DTYPE_BYTES: Dict[str, int] = {"fp32": 4, "int8": 1, "fp8": 1}
+KV_DTYPES = tuple(KV_DTYPE_BYTES)
 
-def init_pages(cfg, n_blocks: int, block_size: int, dtype=None) -> Dict:
+
+def kv_dtype_supported(kv_dtype: str) -> bool:
+    """fp8 needs a jax new enough to ship ``float8_e4m3fn``; fp32/int8 are
+    always available."""
+    if kv_dtype not in KV_DTYPE_BYTES:
+        return False
+    if kv_dtype != "fp8":
+        return True
+    import jax.numpy as jnp
+    return hasattr(jnp, "float8_e4m3fn")
+
+
+def _kv_qspec(kv_dtype: str):
+    """(packed jnp dtype, qmax) for a quantized layout name."""
+    import jax.numpy as jnp
+
+    if kv_dtype == "int8":
+        return jnp.int8, 127.0
+    if kv_dtype == "fp8":
+        if not kv_dtype_supported("fp8"):
+            raise ValueError(
+                "kv_dtype='fp8' needs jax.numpy.float8_e4m3fn, which this "
+                "jax build does not provide; use 'int8'")
+        return jnp.float8_e4m3fn, float(jnp.finfo(jnp.float8_e4m3fn).max)
+    raise ValueError(f"unknown quantized kv_dtype {kv_dtype!r}; "
+                     f"expected one of {sorted(KV_DTYPE_BYTES)}")
+
+
+def quantize_kv(x, kv_dtype: str):
+    """Per-block-per-head abs-max quantization of KV rows.
+
+    ``x``: ``(..., block_size, Hkv, D)`` float rows (any leading axes).
+    Returns ``(q, scales)`` with ``q`` the same shape packed to the target
+    dtype and ``scales`` shaped ``(..., Hkv)`` float32, one scale per
+    (leading..., kv-head) tile — the whole ``(block_size, D)`` extent of a
+    head shares one scale.  int8 rounds to nearest, so the round-trip error
+    is bounded by ``scale / 2`` per element (the property test in
+    ``tests/test_kv_pool.py`` pins this); fp8 casts and inherits the
+    format's relative error instead.
+    """
+    import jax.numpy as jnp
+
+    qdt, qmax = _kv_qspec(kv_dtype)
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=(-3, -1))
+    # floor keeps an all-zero block from dividing by zero; any real row's
+    # abs-max dominates it, so the error bound is untouched
+    scales = jnp.maximum(amax / qmax, 1e-12)
+    q = xf / scales[..., None, :, None]
+    if qdt == jnp.int8:
+        q = jnp.clip(jnp.round(q), -qmax, qmax)
+    return q.astype(qdt), scales
+
+
+def dequantize_kv(q, scales, dtype=None):
+    """Inverse of ``quantize_kv``: ``q (..., bs, Hkv, D)`` packed values +
+    ``scales (..., Hkv)`` back to float (``dtype`` or float32)."""
+    import jax.numpy as jnp
+
+    x = q.astype(jnp.float32) * scales.astype(jnp.float32)[..., None, :, None]
+    return x if dtype is None else x.astype(dtype)
+
+
+def init_pages(cfg, n_blocks: int, block_size: int, dtype=None, *,
+               kv_dtype: str = "fp32") -> Dict:
     """Page arrays ``k/v: (L, n_blocks, block_size, Hkv, D)``; empty dict for
-    attention-free families (their recurrent state is per-slot already)."""
+    attention-free families (their recurrent state is per-slot already).
+    With a quantized ``kv_dtype`` the pages are packed (int8/fp8) and the
+    dict carries ``k_scales``/``v_scales`` ``(L, n_blocks, Hkv)`` float32 —
+    their presence is how downstream consumers detect the layout."""
     import jax.numpy as jnp
 
     if cfg.family == "ssm":
         return {}
-    dt = dtype or jnp.dtype(cfg.dtype)
     shape = (cfg.n_layers, n_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
+    if kv_dtype != "fp32":
+        qdt, _ = _kv_qspec(kv_dtype)
+        sshape = (cfg.n_layers, n_blocks, cfg.n_kv_heads)
+        return {"k_pages": jnp.zeros(shape, qdt),
+                "v_pages": jnp.zeros(shape, qdt),
+                "k_scales": jnp.zeros(sshape, jnp.float32),
+                "v_scales": jnp.zeros(sshape, jnp.float32)}
+    dt = dtype or jnp.dtype(cfg.dtype)
     return {"k_pages": jnp.zeros(shape, dt), "v_pages": jnp.zeros(shape, dt)}
 
 
@@ -366,6 +448,12 @@ def write_prefix_pages(pages: Dict, k, v, tables) -> Dict:
     harmlessly in the null block (which no live slot ever reads).  A prefix
     longer than the table can hold is a caller bug and raises — this module
     never silently truncates context.
+
+    When ``pages`` carries ``k_scales``/``v_scales`` (a quantized pool from
+    ``init_pages(kv_dtype=...)``) this is the quantize-on-append path: each
+    incoming block is packed with a fresh per-(layer, block, head) abs-max
+    scale and both the packed values and the scales are scattered in the
+    same one-scatter-per-array shape.
     """
     import jax.numpy as jnp
 
@@ -383,6 +471,16 @@ def write_prefix_pages(pages: Dict, k, v, tables) -> Dict:
     k_blk = jnp.pad(k, widths).reshape(L, B * T, bs, Hkv, D)
     v_blk = jnp.pad(v, widths).reshape(L, B * T, bs, Hkv, D)
     idx = jnp.asarray(tables, jnp.int32).reshape(-1)
+    if "k_scales" in pages:
+        name = "int8" if kp.dtype == jnp.int8 else "fp8"
+        kq, ks = quantize_kv(k_blk, name)
+        vq, vs = quantize_kv(v_blk, name)
+        return {
+            "k_pages": kp.at[:, idx].set(kq),
+            "v_pages": vp.at[:, idx].set(vq),
+            "k_scales": pages["k_scales"].at[:, idx].set(ks),
+            "v_scales": pages["v_scales"].at[:, idx].set(vs),
+        }
     return {
         "k_pages": kp.at[:, idx].set(k_blk.astype(kp.dtype)),
         "v_pages": vp.at[:, idx].set(v_blk.astype(vp.dtype)),

@@ -427,3 +427,41 @@ def test_reference_profile_matches_generator_byte_for_byte(tmp_path):
     out = tmp_path / "ref.json"
     _tools_module().main(["--out", str(out)])
     assert out.read_bytes() == committed.read_bytes()
+
+
+def test_kv_variant_profile_reprices_bytes_not_durations():
+    """The committed int8 variant profile replays the SAME skewed
+    durations as the fp32 reference (the synthetic generator skews
+    FLOPs-derived durations, which quantization does not change) but with
+    reduced KV bytes in every phase cost — the quantity the contention
+    timeline and the demand policy actually consume.  A variant profile
+    that accidentally changed durations, or one that failed to reprice
+    bytes, would both fail here."""
+    from pathlib import Path
+
+    cfg = _cfg()
+    prof_dir = Path(__file__).resolve().parents[1] / "docs" / "profiles"
+    f32 = load_profile(prof_dir / "qwen2_7b_smoke.json", cfg)
+    i8 = load_profile(prof_dir / "qwen2_7b_smoke_kv_int8.json", cfg)
+    assert i8.timer is None                # frozen replay, like the fp32 one
+    assert i8.n_warm == f32.n_warm > 0     # identical calibration envelope
+    for b in (1, 4):
+        pf, pi = f32.decode([40] * b), i8.decode([40] * b)
+        assert pi.duration == pf.duration  # same synthetic skew
+        assert pi.flops == pf.flops        # quantization is not fewer FLOPs
+        assert pi.byts < pf.byts           # ...it is fewer KV bytes
+    pf, pi = f32.prefill(4, 32), i8.prefill(4, 32)
+    assert pi.duration == pf.duration and pi.byts < pf.byts
+
+
+def test_kv_variant_profile_matches_generator_byte_for_byte(tmp_path):
+    """Same drift pin for the int8 variant: ``--kv-dtype int8`` reproduces
+    the committed ``_kv_int8`` artifact exactly."""
+    from pathlib import Path
+
+    committed = Path(__file__).resolve().parents[1] / "docs" / \
+        "profiles" / "qwen2_7b_smoke_kv_int8.json"
+    assert committed.exists(), "the int8 variant profile must be committed"
+    out = tmp_path / "ref_int8.json"
+    _tools_module().main(["--kv-dtype", "int8", "--out", str(out)])
+    assert out.read_bytes() == committed.read_bytes()

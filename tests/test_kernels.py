@@ -161,6 +161,151 @@ def test_paged_ref_matches_dense_decode():
                                rtol=2e-4, atol=2e-4)
 
 
+# ---------------------------------------------------------------------------
+# quantized + blockwise-sparse paged decode
+# ---------------------------------------------------------------------------
+
+# int8 KV rounds to nearest inside a per-(block, kv-head) abs-max scale, so
+# the per-element cache error is bounded by scale/2; through the softmax the
+# attention output lands well inside 5e-2 on these shapes (measured ~1e-2).
+# This budget is for quant-vs-DENSE only — kernel-vs-quant-oracle runs at the
+# base TOL because both sides do the identical dequant multiply.
+QTOL = dict(rtol=5e-2, atol=5e-2)
+
+
+def _quantized_pool(rng, B, T, N, bs, Hkv, D, lens):
+    from repro.serving.kv_pool import quantize_kv
+    kp, vp, tables = _paged_pool(rng, B, T, N, bs, Hkv, D, jnp.float32, lens)
+    kq, ks = quantize_kv(kp, "int8")
+    vq, vs = quantize_kv(vp, "int8")
+    return kp, vp, (kq, ks, vq, vs), tables
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,D,bs,window", [
+    (3, 4, 2, 32, 16, 0),     # GQA, ragged lengths
+    (2, 8, 8, 64, 32, 0),     # MHA
+    (2, 8, 2, 64, 16, 48),    # sliding window
+    (1, 8, 1, 32, 16, 0),     # MQA
+])
+def test_paged_decode_quant(B, Hq, Hkv, D, bs, window):
+    """Quantized Pallas kernel vs the quantized oracle at base tolerance,
+    and the quantized oracle vs the dense fp32 ref inside QTOL."""
+    from repro.kernels.paged_attention import ops as pa_ops
+    from repro.kernels.paged_attention import ref as pa_ref
+    rng = np.random.default_rng(0)
+    T, N = 4, 1 + 4 * B
+    lens = [int(x) for x in rng.integers(1, T * bs, size=B)]
+    kp, vp, (kq, ks, vq, vs), tables = \
+        _quantized_pool(rng, B, T, N, bs, Hkv, D, lens)
+    q = jax.random.normal(jax.random.PRNGKey(5), (B, Hq, D))
+    cur = jnp.asarray([l - 1 for l in lens], jnp.int32)
+    out = pa_ops.paged_decode_quant(q, kq, vq, ks, vs, tables, cur,
+                                    window=window)
+    ref = pa_ref.paged_decode_attention_quant(q, kq, vq, ks, vs, tables,
+                                              cur, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               **TOL[jnp.float32])
+    dense = pa_ref.paged_decode_attention(q, kp, vp, tables, cur,
+                                          window=window)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(dense), **QTOL)
+
+
+def test_quant_oracle_matches_explicit_dequant():
+    """The quantized oracle equals the dense oracle run on explicitly
+    dequantized pages — dequant-in-kernel changes arithmetic order only."""
+    from repro.kernels.paged_attention import ref as pa_ref
+    from repro.serving.kv_pool import dequantize_kv
+    rng = np.random.default_rng(2)
+    B, Hq, Hkv, D, bs, T, N = 2, 4, 2, 32, 8, 4, 12
+    lens = [13, 27]
+    _, _, (kq, ks, vq, vs), tables = \
+        _quantized_pool(rng, B, T, N, bs, Hkv, D, lens)
+    q = jax.random.normal(jax.random.PRNGKey(7), (B, Hq, D))
+    cur = jnp.asarray([l - 1 for l in lens], jnp.int32)
+    out_q = pa_ref.paged_decode_attention_quant(q, kq, vq, ks, vs,
+                                                tables, cur)
+    out_d = pa_ref.paged_decode_attention(q, dequantize_kv(kq, ks),
+                                          dequantize_kv(vq, vs), tables, cur)
+    np.testing.assert_allclose(np.asarray(out_q), np.asarray(out_d),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,D,bs,threshold,window", [
+    (3, 4, 2, 32, 16, 0.05, 0),    # GQA, ragged lengths
+    (2, 8, 8, 64, 32, 0.10, 0),    # MHA
+    (2, 8, 2, 64, 16, 0.05, 48),   # sliding window
+    (1, 8, 1, 32, 16, 0.20, 0),    # MQA, aggressive threshold
+])
+def test_paged_decode_sparse(B, Hq, Hkv, D, bs, threshold, window):
+    """Sparse Pallas kernel vs the sparse oracle at base tolerance — both
+    consume the same ``block_keep_mask``, so selection cannot diverge and
+    only the attention arithmetic is under test."""
+    from repro.kernels.paged_attention import ops as pa_ops
+    from repro.kernels.paged_attention import ref as pa_ref
+    rng = np.random.default_rng(0)
+    T, N = 4, 1 + 4 * B
+    lens = [int(x) for x in rng.integers(1, T * bs, size=B)]
+    kp, vp, tables = _paged_pool(rng, B, T, N, bs, Hkv, D, jnp.float32, lens)
+    q = jax.random.normal(jax.random.PRNGKey(5), (B, Hq, D))
+    cur = jnp.asarray([l - 1 for l in lens], jnp.int32)
+    out = pa_ops.paged_decode_sparse(q, kp, vp, tables, cur,
+                                     threshold=threshold, window=window)
+    ref = pa_ref.paged_decode_attention_sparse(q, kp, vp, tables, cur,
+                                               threshold=threshold,
+                                               window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               **TOL[jnp.float32])
+
+
+def test_sparse_threshold_zero_is_dense():
+    """threshold=0 keeps every valid block: the sparse oracle coincides
+    with the dense oracle exactly, and the sparse kernel matches the dense
+    kernel within base tolerance."""
+    from repro.kernels.paged_attention import ops as pa_ops
+    from repro.kernels.paged_attention import ref as pa_ref
+    rng = np.random.default_rng(3)
+    B, Hq, Hkv, D, bs, T, N = 2, 8, 2, 64, 16, 4, 12
+    lens = [21, 55]
+    kp, vp, tables = _paged_pool(rng, B, T, N, bs, Hkv, D, jnp.float32, lens)
+    q = jax.random.normal(jax.random.PRNGKey(8), (B, Hq, D))
+    cur = jnp.asarray([l - 1 for l in lens], jnp.int32)
+    ref_s = pa_ref.paged_decode_attention_sparse(q, kp, vp, tables, cur,
+                                                 threshold=0.0)
+    ref_d = pa_ref.paged_decode_attention(q, kp, vp, tables, cur)
+    np.testing.assert_array_equal(np.asarray(ref_s), np.asarray(ref_d))
+    out_s = pa_ops.paged_decode_sparse(q, kp, vp, tables, cur, threshold=0.0)
+    np.testing.assert_allclose(np.asarray(out_s), np.asarray(ref_d),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_block_keep_mask_invariants():
+    """Selection invariants: the block holding cur_pos is always kept,
+    nothing past cur_pos is ever kept, threshold=0 keeps exactly the valid
+    blocks, and packed pages + scales select identically to the
+    dequantized pages (the per-block scale commutes with the mean)."""
+    from repro.kernels.paged_attention.ref import block_keep_mask
+    from repro.serving.kv_pool import dequantize_kv, quantize_kv
+    rng = np.random.default_rng(4)
+    B, Hq, Hkv, D, bs, T, N = 3, 4, 2, 32, 8, 5, 16
+    lens = [5, 17, 39]
+    kp, _, tables = _paged_pool(rng, B, T, N, bs, Hkv, D, jnp.float32, lens)
+    q = jax.random.normal(jax.random.PRNGKey(9), (B, Hq, D))
+    cur = jnp.asarray([l - 1 for l in lens], jnp.int32)
+    for thr in (0.0, 0.1, 0.5):
+        keep = np.asarray(block_keep_mask(q, kp, tables, cur, threshold=thr))
+        for b, l in enumerate(lens):
+            nblk = (l + bs - 1) // bs
+            assert keep[b, :, (l - 1) // bs].all()       # cur block kept
+            assert not keep[b, :, nblk:].any()           # nothing past cur
+            if thr == 0.0:
+                assert keep[b, :, :nblk].all()           # dense at zero
+    kq, ks = quantize_kv(kp, "int8")
+    keep_q = block_keep_mask(q, kq, tables, cur, threshold=0.1, k_scales=ks)
+    keep_f = block_keep_mask(q, dequantize_kv(kq, ks), tables, cur,
+                             threshold=0.1)
+    np.testing.assert_array_equal(np.asarray(keep_q), np.asarray(keep_f))
+
+
 def test_xla_flash_matches_naive():
     """The in-model chunked-scan attention equals the materialized oracle."""
     from repro.models.layers import flash_attention, naive_attention

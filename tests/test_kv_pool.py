@@ -110,6 +110,85 @@ def test_write_prefix_pages_rejects_overflow():
 
 
 # ---------------------------------------------------------------------------
+# quantized layout: round-trip error bound + quantize-on-append scatter
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_round_trip_int8_bound():
+    """int8 rounds to nearest within a per-(block, kv-head) abs-max scale,
+    so every element round-trips within scale/2 (plus f32 slack)."""
+    jnp = pytest.importorskip("jax.numpy")
+    import numpy as np
+    from repro.serving.kv_pool import dequantize_kv, quantize_kv
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((3, 8, 2, 16)) * 5.0, jnp.float32)
+    q, s = quantize_kv(x, "int8")
+    assert q.dtype == jnp.int8 and q.shape == x.shape
+    assert s.shape == (3, 2) and s.dtype == jnp.float32
+    err = np.abs(np.asarray(dequantize_kv(q, s)) - np.asarray(x))
+    bound = np.asarray(s)[:, None, :, None] * (0.5 + 1e-5)
+    assert (err <= bound).all()
+    # all-zero input: the scale floor keeps the round-trip exact
+    zq, zs = quantize_kv(jnp.zeros_like(x), "int8")
+    assert not np.asarray(dequantize_kv(zq, zs)).any()
+
+
+@given(st.integers(0, 2**16), st.floats(1e-4, 1e4),
+       st.integers(1, 4), st.integers(1, 3), st.integers(1, 8))
+@settings(max_examples=40, deadline=None)
+def test_quantize_round_trip_property(seed, amp, nblk, hkv, d):
+    """Property form of the scale/2 bound over random shapes/amplitudes:
+    dequantize(quantize(x)) never strays more than half a quantization
+    step from x, element-wise, for any (block, head) tile."""
+    jnp = pytest.importorskip("jax.numpy")
+    import numpy as np
+    from repro.serving.kv_pool import dequantize_kv, quantize_kv
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((nblk, 4, hkv, d)) * amp,
+                    jnp.float32)
+    q, s = quantize_kv(x, "int8")
+    err = np.abs(np.asarray(dequantize_kv(q, s)) - np.asarray(x))
+    bound = np.asarray(s)[:, None, :, None] * (0.5 + 1e-5) + 1e-9
+    assert (err <= bound).all()
+
+
+def test_write_prefix_pages_quantized_scatter():
+    """The quantize-on-append path: written blocks carry packed values +
+    fresh per-(layer, block, head) scales that round-trip the prefix
+    within scale/2; blocks outside the tables stay untouched."""
+    jnp = pytest.importorskip("jax.numpy")
+    import numpy as np
+    from repro.serving.kv_pool import dequantize_kv, write_prefix_pages
+
+    L, B, Hkv, D, bs, T, N = 2, 1, 2, 4, 4, 2, 8
+    pages = {"k_pages": jnp.zeros((L, N, bs, Hkv, D), jnp.int8),
+             "v_pages": jnp.zeros((L, N, bs, Hkv, D), jnp.int8),
+             "k_scales": jnp.zeros((L, N, Hkv), jnp.float32),
+             "v_scales": jnp.zeros((L, N, Hkv), jnp.float32)}
+    tables = jnp.asarray([[2, 5]], jnp.int32)
+    rng = np.random.default_rng(1)
+    k = jnp.asarray(rng.standard_normal((L, B, T * bs, Hkv, D)) * 3.0,
+                    jnp.float32)
+    v = jnp.asarray(rng.standard_normal((L, B, T * bs, Hkv, D)) * 3.0,
+                    jnp.float32)
+    out = write_prefix_pages(pages, k, v, tables)
+    assert out["k_pages"].dtype == jnp.int8
+    for pk, sk, src in (("k_pages", "k_scales", k), ("v_pages", "v_scales", v)):
+        blk = out[pk][:, tables[0]]               # (L, T, bs, Hkv, D)
+        scl = out[sk][:, tables[0]]               # (L, T, Hkv)
+        got = np.asarray(dequantize_kv(blk, scl))
+        want = np.asarray(src).reshape(L, T, bs, Hkv, D)
+        bound = np.asarray(scl)[:, :, None, :, None] * (0.5 + 1e-5) + 1e-9
+        assert (np.abs(got - want) <= bound).all()
+        untouched = np.ones(N, bool)
+        untouched[[2, 5]] = False
+        assert not np.asarray(out[pk])[:, untouched].any()
+        assert not np.asarray(out[sk])[:, untouched].any()
+
+
+# ---------------------------------------------------------------------------
 # prefix index: sharing, copy-on-write, LRU eviction
 # ---------------------------------------------------------------------------
 

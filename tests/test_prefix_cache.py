@@ -125,6 +125,34 @@ def test_cache_off_and_excluded_families():
         _sim(get_config("mamba2-130m", smoke=True), prefix_cache=True)
 
 
+def test_hit_counts_identical_across_kv_dtypes():
+    """Regression: the prefix index hashes TOKEN IDS, never page bytes, so
+    an int8-quantized engine sees exactly the hits (and cached-token
+    counts) the fp32 engine sees on the same prompt stream.  If hashing
+    ever touched the packed representation, quantized pools would silently
+    stop sharing."""
+    cfg = _cfg()
+    prompts = _prompts(cfg, [4, 6, 4, 6])
+
+    def serve(kv_dtype):
+        q = RequestQueue()
+        for p in prompts:
+            q.submit(p, 4)
+        eng = _sim(cfg, prefix_cache=True, kv_dtype=kv_dtype)
+        eng.assign(q.pop(4))
+        eng.prefill_wave(0.0)
+        while eng.busy:
+            eng.decode_step(0.0)
+        assert len(eng.completed) == 4
+        return eng
+
+    f32, i8 = serve("fp32"), serve("int8")
+    assert f32.n_prefix_hits == i8.n_prefix_hits > 0
+    assert f32.n_cached_tokens == i8.n_cached_tokens > 0
+    assert f32.pool.n_hits == i8.pool.n_hits
+    assert f32.pool.n_cow == i8.pool.n_cow
+
+
 # ---------------------------------------------------------------------------
 # admission: deadline feasibility sees the probe (satellite: queue fix)
 # ---------------------------------------------------------------------------

@@ -36,15 +36,21 @@ DECODE_SKEW = 0.8
 
 
 def build_reference_model(cfg, peak_flops: float, *, slots: int,
-                          prompt_len: int, gen: int):
+                          prompt_len: int, gen: int,
+                          kv_dtype: str = "fp32", sparse_keep: float = 1.0):
     """A warm ``MeasuredCostModel`` whose EMAs are the analytic durations
     under the per-phase reference skew, covering every shape bucket the
     default serving load touches (batch 1..slots, the full decode context
     ramp).  Cold buckets outside that envelope fall back to the analytic
-    duration at replay time, so coverage bounds accuracy, not liveness."""
+    duration at replay time, so coverage bounds accuracy, not liveness.
+    ``kv_dtype``/``sparse_keep`` bake a KV-layout variant into the profile:
+    the skewed durations are derived from the variant's analytic
+    decomposition, so a replayed variant profile prices the reduced KV
+    traffic."""
     from repro.profiling import MeasuredCostModel, PhaseTimer
 
-    model = MeasuredCostModel(cfg, peak_flops, timer=PhaseTimer())
+    model = MeasuredCostModel(cfg, peak_flops, timer=PhaseTimer(),
+                              kv_dtype=kv_dtype, sparse_keep=sparse_keep)
     ana = model.analytic
     prefix = (getattr(cfg, "n_meta_tokens", 0) or 0) + \
         (getattr(cfg, "n_img_tokens", 0) or 0)
@@ -74,12 +80,23 @@ def main(argv=None) -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--kv-dtype", default="fp32",
+                    choices=["fp32", "int8", "fp8"],
+                    help="bake a quantized-KV pricing variant into the "
+                         "profile (changes the default output name to "
+                         "<cfg.name>_smoke_kv_<dtype>.json)")
+    ap.add_argument("--sparse-keep", type=float, default=1.0,
+                    help="bake a blockwise-sparse keep fraction (0, 1] "
+                         "into the profile's decode pricing")
     ap.add_argument("--out", default=None, metavar="PATH",
                     help="output path (default: docs/profiles/"
-                         "<cfg.name>_smoke.json next to this repo)")
+                         "<cfg.name>_smoke.json, with a _kv_<dtype> "
+                         "suffix for quantized variants)")
     args = ap.parse_args(argv)
     if args.workers < 1 or args.slots < 1:
         ap.error("--workers and --slots must be >= 1")
+    if not 0.0 < args.sparse_keep <= 1.0:
+        ap.error(f"--sparse-keep must be in (0, 1] (got {args.sparse_keep})")
 
     from repro.configs import get_config
     from repro.core import hw
@@ -88,14 +105,17 @@ def main(argv=None) -> None:
     cfg = get_config(args.arch, smoke=args.smoke)
     model = build_reference_model(
         cfg, hw.TPU_PEAK_FLOPS / args.workers, slots=args.slots,
-        prompt_len=args.prompt_len, gen=args.gen)
+        prompt_len=args.prompt_len, gen=args.gen,
+        kv_dtype=args.kv_dtype, sparse_keep=args.sparse_keep)
+    suffix = "" if args.kv_dtype == "fp32" else f"_kv_{args.kv_dtype}"
     out = Path(args.out) if args.out else \
         Path(__file__).resolve().parents[1] / "docs" / "profiles" / \
-        f"{cfg.name}_smoke.json"
+        f"{cfg.name}_smoke{suffix}.json"
     save_profile(model, out)
     print(f"wrote {out}: {model.n_warm} warm buckets, "
           f"{model.n_observations} observations "
-          f"(prefill x{PREFILL_SKEW}, decode x{DECODE_SKEW})")
+          f"(prefill x{PREFILL_SKEW}, decode x{DECODE_SKEW}, "
+          f"kv {args.kv_dtype}, keep {args.sparse_keep:g})")
 
 
 if __name__ == "__main__":
