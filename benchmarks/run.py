@@ -32,6 +32,7 @@ def main() -> None:
         (serving_shaping.run_kv_quant, ()),  # quantized/sparse KV repricing
         (serving_shaping.run_cluster, ()),   # multiprocess cluster dispatch
         (serving_shaping.run_pd, ()),        # prefill/decode disaggregation
+        (serving_shaping.run_trace_fidelity, ()),  # trace==metrics invariant
         (roofline_report.run, ()),
     ]:
         name = f"{fn.__module__}.{fn.__name__}"

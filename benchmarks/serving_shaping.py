@@ -679,6 +679,102 @@ def run_pd(arch: str = "qwen2-7b", smoke: bool = True,
         _note(name, m, extra)
 
 
+def run_trace_fidelity(arch: str = "qwen2-7b", smoke: bool = True,
+                       n_requests: int = 48, total_slots: int = 16,
+                       prompt_len: int = 32, gen: int = 16):
+    """The observability scenario: the wave-granular P=4 event-clock
+    sweep re-run with a ``repro.obs.Tracer`` attached and the Chrome-trace
+    export integrated back out of its bw counter track.
+
+    Asserted, per policy in {none, demand}:
+      * the exported document passes ``validate_chrome``;
+      * the untrimmed time-weighted mean/std of the counter-track
+        segments equals ``ServingMetrics.bw_stats(0.0)`` within 1e-9
+        relative — the trace IS the demand overlay, not a resampling;
+      * an untraced twin of the same cell reproduces the traced run's
+        virtual metrics EXACTLY (tracing never perturbs the clock);
+    and across the two policies the trimmed std reconstructed from the
+    traces reproduces the shaping gap: demand < none.
+    """
+    import json as _json
+
+    from repro.obs import Tracer, to_chrome, trace_bw_segments, \
+        validate_chrome
+    from repro.serving.metrics import achieved_bw_stats
+
+    cfg = get_config(arch, smoke=smoke)
+    bw = phase_balanced_bandwidth(cfg, total_slots=total_slots,
+                                  prompt_len=prompt_len, gen=gen)
+    P, slots = 4, max(total_slots // 4, 1)
+    trim = 1.5 * _wave_time(cfg, partitions=P, total_slots=total_slots,
+                            prompt_len=prompt_len, gen=gen)
+
+    def cell(policy, tracer):
+        rng = np.random.default_rng(0)
+        queue = RequestQueue()
+        if tracer is not None:
+            queue.tracer = tracer
+        for _ in range(n_requests):
+            queue.submit(rng.integers(1, cfg.vocab, size=(prompt_len,))
+                         .astype(np.int32), gen)
+        engines = [SimulatedEngine(cfg, slots=slots,
+                                   max_len=prompt_len + 4 * gen, pid=p,
+                                   peak_flops=hw.TPU_PEAK_FLOPS / P,
+                                   wave_only=True)
+                   for p in range(P)]
+        sched = make_scheduler(engines, queue, policy=policy,
+                               bandwidth=bw, clock="event")
+        if tracer is not None:
+            sched.attach_tracer(tracer)
+        t0 = time.perf_counter()
+        m = sched.run()
+        us = (time.perf_counter() - t0) * 1e6
+        assert len(queue.completed) == n_requests, \
+            f"trace cell served {len(queue.completed)}/{n_requests}"
+        return m, us
+
+    trimmed_std = {}
+    for policy in ("none", "demand"):
+        tracer = Tracer()
+        m, us = cell(policy, tracer)
+        # the JSON round trip IS part of the scenario: fidelity must
+        # survive serialisation, as --trace files do
+        doc = _json.loads(_json.dumps(to_chrome(tracer.events)))
+        errs = validate_chrome(doc)
+        assert errs == [], f"trace schema violations: {errs[:3]}"
+        segs = trace_bw_segments(doc)
+        w = np.array([b - a for a, b, _ in segs])
+        v = np.array([val for _, _, val in segs])
+        mean = float(np.average(v, weights=w))
+        std = float(np.sqrt(np.average((v - mean) ** 2, weights=w)))
+        m_mean, m_std = m.bw_stats(0.0)
+        mean_err = abs(mean - m_mean) / max(abs(m_mean), 1e-15)
+        std_err = abs(std - m_std) / max(abs(m_std), 1e-15)
+        assert mean_err < 1e-9 and std_err < 1e-9, \
+            (f"counter track diverged from the metrics overlay "
+             f"({policy}): mean_err={mean_err:.3g} std_err={std_err:.3g}")
+        # tracing must not perturb the virtual clock: the untraced twin
+        # reproduces every virtual observable exactly
+        m_off, _ = cell(policy, None)
+        assert m_off.bw_stats(0.0) == (m_mean, m_std)
+        assert m_off.throughput() == m.throughput()
+        t_end = max(b for _, b, _ in segs)
+        trimmed_std[policy] = achieved_bw_stats(segs, t_end, trim=trim)[1]
+        name = f"serving_trace.{cfg.name}.P{P}.{policy}.event"
+        record(name, us,
+               f"trace_events={len(tracer.events)};"
+               f"bw_mean_err_rel={mean_err:.2e};"
+               f"bw_std_err_rel={std_err:.2e}")
+        _note(name, m, {"trace_events": len(tracer.events),
+                        "bw_mean_err_rel": mean_err,
+                        "bw_std_err_rel": std_err,
+                        "bw_std_trimmed_from_trace": trimmed_std[policy]})
+    gap = trimmed_std["demand"] / max(trimmed_std["none"], 1e-15)
+    assert gap < 1.0, \
+        (f"trace-reconstructed shaping gap lost: trimmed std ratio "
+         f"{gap:.3f} (demand vs none)")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-7b")
@@ -725,6 +821,9 @@ def main(argv=None):
         run_pd(args.arch, smoke=args.smoke, n_requests=n_req,
                total_slots=args.slots, prompt_len=args.prompt_len,
                gen=args.gen)
+    run_trace_fidelity(args.arch, smoke=args.smoke, n_requests=n_req,
+                       total_slots=args.slots, prompt_len=args.prompt_len,
+                       gen=args.gen)
     out = write_bench_json(args.json)
     print(f"# wrote {out} ({len(SCENARIOS)} scenarios)")
 

@@ -133,6 +133,14 @@ class Span:
     t_end: float = 0.0              # filled at completion
     rem: float = 0.0                # remaining full-speed seconds
     alloc: float = 0.0              # bytes/s granted in the current segment
+    bound: bool = False             # ever in the max-min binding set
+                                    # (only maintained while tracing)
+
+    @property
+    def bytes_done(self) -> float:
+        """Bytes moved so far (full volume once complete) — what a
+        cancellation forfeits."""
+        return self.byts * (1.0 - self.rem / max(self.duration, 1e-15))
 
     @property
     def demand(self) -> float:      # bytes/s wanted when compute-bound
@@ -159,6 +167,32 @@ class ContentionTimeline:
         self._timers: List[Tuple[float, int, Callable[[float], None]]] = []
         self._seq = 0
         self.n_completed = 0
+        # cancellation cost accounting (failover observability): bytes the
+        # pipe moved for spans that never completed — kept unconditionally,
+        # the tracer additionally gets per-span ``cancelled`` events
+        self.n_cancelled = 0
+        self.cancelled_bytes = 0.0
+        # observability is strictly opt-in: every emission site below is
+        # guarded by ``if self.tracer is not None`` so the off path runs
+        # no tracing code at all (pinned by tests/test_obs.py)
+        self.tracer = None
+
+    def attach_tracer(self, tracer) -> None:
+        """Bind a tracer to this clock: span lifecycle events land on the
+        'spans' track group and the tracer's ``vnow`` follows ``now``."""
+        self.tracer = tracer
+        tracer.clock = self
+
+    @staticmethod
+    def _track(key) -> Tuple[str, str]:
+        """(track id, slice name) for a span key — the repo convention is
+        ``(partition_or_worker_id, op_kind)`` tuples.  Each (owner, kind)
+        pair gets its own track so differently-named spans never overlap
+        on one track (keeps begin/end strictly stack-paired; same-kind
+        overlap — e.g. two concurrent handoffs — pairs by name)."""
+        if isinstance(key, tuple) and len(key) == 2:
+            return f"{key[0]}.{key[1]}", str(key[1])
+        return ("0" if key is None else str(key)), "span"
 
     # -- issue ---------------------------------------------------------------
     def start(self, duration: float, byts: float, *, key: object = None,
@@ -168,6 +202,10 @@ class ContentionTimeline:
                   on_complete=on_complete, t_start=self.now,
                   rem=float(duration))
         self.spans.append(sp)
+        if self.tracer is not None:
+            tid, name = self._track(key)
+            self.tracer.begin("spans", tid, name, self.now, bytes=sp.byts,
+                              duration=sp.duration, demand=sp.demand)
         return sp
 
     def call_at(self, t: float, fn: Callable[[float], None]) -> None:
@@ -181,13 +219,25 @@ class ContentionTimeline:
         a worker dies mid-op: the work it was doing will never commit, so
         it must stop contending for bandwidth.  Bandwidth it consumed in
         already-recorded segments stays recorded (it really was moving
-        bytes until the failure).  Returns True when the span was in
-        flight."""
+        bytes until the failure).  The forfeited progress is accounted in
+        ``n_cancelled`` / ``cancelled_bytes`` and, when tracing, emitted
+        as a ``cancelled`` instant carrying bytes-completed — failover
+        cost is measurable, not silently dropped.  Returns True when the
+        span was in flight."""
         try:
             self.spans.remove(sp)
-            return True
         except ValueError:
             return False
+        self.n_cancelled += 1
+        self.cancelled_bytes += sp.bytes_done
+        if self.tracer is not None:
+            tid, name = self._track(sp.key)
+            self.tracer.end("spans", tid, name, self.now, cancelled=True,
+                            bytes_done=sp.bytes_done)
+            self.tracer.instant("spans", tid, "cancelled", self.now,
+                                op=name, bytes=sp.byts,
+                                bytes_done=sp.bytes_done)
+        return True
 
     @property
     def idle(self) -> bool:
@@ -230,6 +280,20 @@ class ContentionTimeline:
         dt = max(min(dt_candidates), _EPS_TIME)
 
         self.bw_samples.append((self.now, self.now + dt, float(alloc.sum())))
+        if self.tracer is not None:
+            # one counter sample per fluid segment: the aggregate demand
+            # curve is the live Fig. 6 observable, allocated bw shows the
+            # pipe clipping it, and ``bound`` counts the max-min binding
+            # set (spans running below full speed)
+            n_bound = 0
+            for sp in self.spans:
+                if sp._speed < 1.0 - _EPS_SPEED:
+                    sp.bound = True
+                    n_bound += 1
+            self.tracer.counter("spans", 0, "bw", self.now,
+                                demand=float(demands.sum()),
+                                alloc=float(alloc.sum()),
+                                inflight=len(self.spans), bound=n_bound)
         self.now += dt
         still, done = [], []
         for sp in self.spans:
@@ -239,6 +303,12 @@ class ContentionTimeline:
         for sp in done:
             sp.t_end = self.now
             self.n_completed += 1
+            if self.tracer is not None:
+                tid, name = self._track(sp.key)
+                self.tracer.end(
+                    "spans", tid, name, self.now, bytes=sp.byts,
+                    stretch=(self.now - sp.t_start)
+                    / max(sp.duration, _EPS_TIME), bound=sp.bound)
             if sp.on_complete is not None:
                 sp.on_complete(sp, self.now)
         return True

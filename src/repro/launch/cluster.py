@@ -27,6 +27,8 @@ from pathlib import Path
 
 from repro.configs import get_config
 from repro.core import hw
+from repro.obs import (Tracer, format_summary, observe_phase_durations,
+                       write_chrome)
 from repro.profiling import COST_MODELS
 from repro.serving import RequestQueue, decode_cost, prefill_cost
 from repro.serving.cluster import (ROUTERS, TRANSPORTS, make_cluster,
@@ -95,6 +97,14 @@ def build_cluster_args(ap: argparse.ArgumentParser) -> None:
                          "(in [0, 1); 0 disables).  The block holding the "
                          "current token is always read.  Requires the "
                          "paged pool (incompatible with --dense)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export a Chrome-trace/Perfetto JSON of the run "
+                         "to PATH: per-partition tracks with phase slices, "
+                         "scheduler policy instants, PD handoff flow "
+                         "arrows, and the aggregate bw-demand counter "
+                         "track.  Load at https://ui.perfetto.dev; "
+                         "validate with tools/trace_export.py --check "
+                         "(see docs/observability.md)")
 
 
 def validate_cluster_args(ap: argparse.ArgumentParser, args) -> None:
@@ -146,7 +156,8 @@ def run_cluster(*, arch: str, smoke: bool, workers: int, slots: int,
                 max_queue=None, deadline=None, seed: int = 0,
                 quiet: bool = False, cost_model: str = "analytic",
                 profile=None, pd_split=None, prefix_cache: bool = False,
-                kv_dtype: str = "fp32", sparse_threshold: float = 0.0):
+                kv_dtype: str = "fp32", sparse_threshold: float = 0.0,
+                trace=None):
     """Build the request load + worker fleet, run it, print the summary.
     Returns (controller, metrics)."""
     if profile is not None and cost_model != "measured":
@@ -206,6 +217,12 @@ def run_cluster(*, arch: str, smoke: bool, workers: int, slots: int,
         return pre.duration + req.max_new_tokens * dec.duration
 
     queue = RequestQueue(max_depth=max_queue, service_estimate=estimate)
+    # the tracer must watch the queue BEFORE the load goes in, so the
+    # admission instants and lifecycle 'submit' records are captured
+    tracer = None
+    if trace is not None:
+        tracer = Tracer()
+        queue.tracer = tracer
     rng = np.random.default_rng(seed)
     for _ in range(n_requests):
         queue.submit(rng.integers(1, cfg.vocab, size=(prompt_len,))
@@ -224,6 +241,8 @@ def run_cluster(*, arch: str, smoke: bool, workers: int, slots: int,
     ctl = make_cluster(specs, queue, transport=transport, router=router_arg,
                        bandwidth=bandwidth,
                        heartbeat_timeout=heartbeat_timeout)
+    if tracer is not None:
+        ctl.attach_tracer(tracer)
     m = ctl.run()
     if not quiet:
         s = m.summary()
@@ -242,17 +261,26 @@ def run_cluster(*, arch: str, smoke: bool, workers: int, slots: int,
               f"completed={s['requests_completed']}/{queue.n_submitted} "
               f"rejected={queue.n_rejected} requeued={queue.n_requeued} "
               f"failovers={ctl.n_failovers}")
-        print(f"  throughput: {s['tok_per_s_virtual']:.1f} tok/s (virtual) "
-              f"{s['tok_per_s_wall']:.1f} tok/s (wall)")
-        print(f"  ttft p50={s['ttft_p50']*1e3:.3g}ms "
-              f"p95={s['ttft_p95']*1e3:.3g}ms "
-              f"tpot p50={s['tpot_p50']*1e6:.3g}us "
-              f"deadline_misses={s['deadline_misses']}")
-        am, astd = ctl.achieved_bw_stats()
-        print(f"  bw demand: mean={s['bw_demand_mean']/1e9:.1f} GB/s "
-              f"std={s['bw_demand_std']/1e9:.2f} GB/s; achieved "
-              f"mean={am/1e9:.1f} std={astd/1e9:.2f} "
-              f"(pipe {bandwidth/1e9:.0f} GB/s)")
+        # the shared summary formatter (repro.obs.format_summary): the
+        # fleet registry comes from the worker snapshots piggybacked on
+        # WorkerStatus, so the cluster CLI reports the same prefix-cache
+        # counters the in-process CLI always had
+        reg = ctl.fleet_registry()
+        observe_phase_durations(reg, ctl.trace)
+        reg.inc("queue.submitted", queue.n_submitted)
+        reg.inc("queue.rejected", queue.n_rejected)
+        reg.inc("queue.requeued", queue.n_requeued)
+        lifecycle = tracer.lifecycle.format_exit_line() \
+            if tracer is not None else None
+        for line in format_summary(s, reg, bandwidth=bandwidth,
+                                   achieved=ctl.achieved_bw_stats(),
+                                   prefix_cache=prefix_cache,
+                                   lifecycle=lifecycle):
+            print(line)
+    if tracer is not None:
+        doc = write_chrome(tracer, trace)
+        if not quiet:
+            print(f"  trace: {len(doc['traceEvents'])} events -> {trace}")
     return ctl, m
 
 
@@ -297,7 +325,7 @@ def main(argv=None):
                 cost_model=args.cost_model, profile=args.profile,
                 pd_split=args.pd_split, prefix_cache=args.prefix_cache,
                 kv_dtype=args.kv_dtype,
-                sparse_threshold=args.sparse_threshold)
+                sparse_threshold=args.sparse_threshold, trace=args.trace)
 
 
 if __name__ == "__main__":

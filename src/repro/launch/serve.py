@@ -46,6 +46,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import hw
 from repro.models import api as mapi
+from repro.obs import (Tracer, format_summary, observe_phase_durations,
+                       registry_from_engines, write_chrome)
 from repro.profiling import make_cost_model, save_profile
 from repro.serving import (CLOCKS, EventScheduler, PartitionEngine,
                            RequestQueue, decode_cost, make_scheduler,
@@ -110,6 +112,9 @@ def main(argv=None):
         ap.error(f"--cluster must be >= 1 (got {args.cluster})")
     from repro.launch.cluster import validate_cluster_args
     validate_cluster_args(ap, args)
+    if args.trace is not None and args.clock == "lockstep":
+        ap.error("--trace records the event-driven contention clock; the "
+                 "lockstep oracle has no span timeline to trace")
     if args.cluster is None and args.router == "pd":
         ap.error("--router pd needs --cluster N: prefill/decode "
                  "disaggregation routes between cluster workers")
@@ -143,7 +148,8 @@ def main(argv=None):
             max_queue=args.max_queue, deadline=args.deadline,
             cost_model=args.cost_model, profile=args.profile,
             pd_split=args.pd_split, prefix_cache=args.prefix_cache,
-            kv_dtype=args.kv_dtype, sparse_threshold=args.sparse_threshold)
+            kv_dtype=args.kv_dtype, sparse_threshold=args.sparse_threshold,
+            trace=args.trace)
         return [r.tokens for r in ctl.queue.completed]
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -224,6 +230,12 @@ def main(argv=None):
         if args.prefix_cache else None
     queue = RequestQueue(max_depth=args.max_queue, service_estimate=estimate,
                          prefix_probe=probe)
+    # the tracer must watch the queue BEFORE the load goes in, so the
+    # admission instants and lifecycle 'submit' records are captured
+    tracer = None
+    if args.trace is not None:
+        tracer = Tracer()
+        queue.tracer = tracer
     rng = np.random.default_rng(0)
     for _ in range(args.requests):
         queue.submit(rng.integers(1, cfg.vocab, size=(args.prompt_len,))
@@ -236,6 +248,8 @@ def main(argv=None):
         cfg, total_slots=P * slots, prompt_len=args.prompt_len, gen=args.gen)
     sched = make_scheduler(engines, queue, policy=args.stagger,
                            bandwidth=bandwidth, clock=args.clock)
+    if tracer is not None:
+        sched.attach_tracer(tracer)
     m = sched.run()
     s = m.summary()
     print(f"serve: {cfg.name} P={P} stagger={args.stagger} "
@@ -251,23 +265,23 @@ def main(argv=None):
         if cost_model.timer is not None and args.profile is not None:
             out = save_profile(cost_model, args.profile)
             print(f"  cost model: calibration profile written to {out}")
-    if args.prefix_cache:
-        print(f"  prefix cache: hits={sum(e.n_prefix_hits for e in engines)} "
-              f"cached_tokens={sum(e.n_cached_tokens for e in engines)} "
-              f"cow={sum(e.pool.n_cow for e in engines)} "
-              f"evicted={sum(e.pool.n_evicted for e in engines)}")
-    print(f"  throughput: {s['tok_per_s_virtual']:.1f} tok/s (virtual) "
-          f"{s['tok_per_s_wall']:.1f} tok/s (wall)")
-    print(f"  ttft p50={s['ttft_p50']*1e3:.3g}ms p95={s['ttft_p95']*1e3:.3g}ms"
-          f"  tpot p50={s['tpot_p50']*1e6:.3g}us"
-          f"  deadline_misses={s['deadline_misses']}")
-    print(f"  bw demand: mean={s['bw_demand_mean']/1e9:.1f} GB/s "
-          f"std={s['bw_demand_std']/1e9:.2f} GB/s "
-          f"(pipe {bandwidth/1e9:.0f} GB/s)")
-    if isinstance(sched, EventScheduler):
-        am, astd = sched.achieved_bw_stats()
-        print(f"  bw achieved (event clock): mean={am/1e9:.1f} GB/s "
-              f"std={astd/1e9:.2f} GB/s over {len(sched.trace)} spans")
+    # the shared summary formatter (repro.obs.format_summary) — one
+    # registry-backed report for both CLIs, so the in-process and cluster
+    # runs stay line-compatible
+    reg = registry_from_engines(engines, queue=queue)
+    observe_phase_durations(reg, getattr(sched, "trace", ()))
+    achieved = sched.achieved_bw_stats() \
+        if isinstance(sched, EventScheduler) else None
+    lifecycle = tracer.lifecycle.format_exit_line() \
+        if tracer is not None else None
+    for line in format_summary(s, reg, bandwidth=bandwidth,
+                               achieved=achieved,
+                               prefix_cache=args.prefix_cache,
+                               lifecycle=lifecycle):
+        print(line)
+    if tracer is not None:
+        doc = write_chrome(tracer, args.trace)
+        print(f"  trace: {len(doc['traceEvents'])} events -> {args.trace}")
 
     if not args.no_sim:
         rep = serving_trace_report(

@@ -235,6 +235,11 @@ class ClusterController:
         self.prefill_live = 0
         self.n_failovers = 0
         self.failed_workers: List[int] = []
+        # opt-in observability (repro.obs): the controller records the
+        # whole fleet's trace — worker engines keep tracer=None, so the
+        # loopback and subprocess transports trace identically and no op
+        # is double-counted.  Every site is guarded on `is not None`.
+        self.tracer = None
         self._pumping = False
         self._repump = False
         self.views: Dict[int, WorkerView] = {}
@@ -249,6 +254,23 @@ class ClusterController:
             self.views[hello.wid] = WorkerView(hello)
         if not self.views:
             raise ClusterError("no cluster worker completed the handshake")
+
+    def attach_tracer(self, tracer) -> None:
+        """Wire one tracer through the controller's clock and queue.  The
+        timeline emits the span/counter events; the controller adds the
+        protocol-level view (dispatch, handoffs, heartbeats, failovers)."""
+        self.tracer = tracer
+        self.timeline.attach_tracer(tracer)
+        self.queue.tracer = tracer
+
+    def fleet_registry(self):
+        """Merge the freshest per-worker metrics snapshots (piggybacked on
+        every ``WorkerStatus``) into one fleet-wide ``MetricsRegistry``.
+        Only the LAST snapshot per worker counts — the snapshots are
+        cumulative, so folding every reply would multiply-count."""
+        from repro.obs import merge_snapshots
+        return merge_snapshots(v.status.metrics
+                               for v in self.views_in_order())
 
     # -- mirrors -------------------------------------------------------------
     def views_in_order(self) -> List[WorkerView]:
@@ -282,6 +304,12 @@ class ClusterController:
         cross the boundary."""
         for r in reqs:
             v.outstanding[r.rid] = r
+        if self.tracer is not None:
+            for r in reqs:
+                self.tracer.instant("cluster", v.wid, "dispatch", now,
+                                    rid=r.rid, wid=v.wid)
+                self.tracer.lifecycle.event(r.rid, "dispatch", now,
+                                            wid=v.wid)
         wire = tuple(P.WireRequest.from_request(r) for r in reqs)
         self._rpc(v, P.Assign(requests=wire), now)
 
@@ -333,6 +361,15 @@ class ClusterController:
             req.t_done = rr.t_done
             self.queue.mark_done(req)
             self.metrics.observe_request(req)
+            if self.tracer is not None:
+                lc = self.tracer.lifecycle
+                if req.t_first_token is not None:
+                    lc.event(req.rid, "first_token", req.t_first_token,
+                             wid=v.wid)
+                lc.event(req.rid, "retire",
+                         self.timeline.now if req.t_done is None
+                         else req.t_done,
+                         wid=v.wid, tokens=len(req.tokens))
 
     def _record(self, t0: float, t1: float, wid: int, phase: str,
                 demand: float) -> None:
@@ -346,6 +383,10 @@ class ClusterController:
         v.alive = False
         self.n_failovers += 1
         self.failed_workers.append(v.wid)
+        if self.tracer is not None:
+            self.tracer.instant("cluster", v.wid, "failover", now,
+                                wid=v.wid,
+                                n_outstanding=len(v.outstanding))
         if v.span is not None:
             # the op will never commit: take its span off the clock.  When
             # cancel() returns False the span already left the timeline
@@ -377,6 +418,9 @@ class ClusterController:
         requests fail over.  Returns wid -> alive after the sweep."""
         t_wall = time.time() if t_wall is None else t_wall
         for v in self.views_alive():
+            if self.tracer is not None:
+                self.tracer.instant("cluster", v.wid, "heartbeat",
+                                    self.timeline.now, wid=v.wid)
             self._rpc(v, P.Ping(t_wall=t_wall), self.timeline.now)
         return {wid: v.alive for wid, v in self.views.items()}
 

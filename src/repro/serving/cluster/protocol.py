@@ -117,7 +117,11 @@ class WorkerStatus:
     the worker's on-device timings, and the controller mirror stays
     consistent with them without ever re-pricing controller-side.
     ``active_rids`` lists the requests currently seated in slots — the PD
-    router migrates exactly these off a prefill-pool worker."""
+    router migrates exactly these off a prefill-pool worker.
+    ``metrics`` is the engine's flat ``metrics_snapshot()`` — sorted
+    (name, value) pairs of counters/gauges (prefix-cache hits, pool
+    blocks, phase counts) the controller folds fleet-wide for the unified
+    CLI summary; defaults to empty for wire back-compat."""
     busy: bool
     wants_prefill: bool
     backlog_len: int
@@ -127,6 +131,7 @@ class WorkerStatus:
     wave_dur: float = 0.0
     cost_source: str = "analytic"
     active_rids: Tuple[int, ...] = ()
+    metrics: Tuple[Tuple[str, float], ...] = ()
 
 
 @dataclass(frozen=True)
@@ -373,7 +378,9 @@ def _build(cls, val):
     if cls is RetiredRequest:
         val = dict(val, tokens=tuple(val["tokens"]))
     if cls is WorkerStatus:
-        val = dict(val, active_rids=tuple(val.get("active_rids", ())))
+        val = dict(val, active_rids=tuple(val.get("active_rids", ())),
+                   metrics=tuple((str(k), float(v))
+                                 for k, v in val.get("metrics", ())))
     if cls is PageArray:
         val = dict(val, shape=tuple(val["shape"]))
     if cls is KvHandoff:

@@ -55,7 +55,10 @@ class WorkerRuntime:
             n_active=sum(1 for r in e.active if r is not None),
             head_arrival=head_arrival, pre_dur=pre_dur, wave_dur=wave_dur,
             cost_source=e.cost_model.kind,
-            active_rids=tuple(r.rid for r in e.active if r is not None))
+            active_rids=tuple(r.rid for r in e.active if r is not None),
+            # flat metrics snapshot, piggybacked on every reply so the
+            # controller's fleet view is as fresh as its worker mirror
+            metrics=e.metrics_snapshot())
 
     def hello(self) -> P.Hello:
         return P.Hello(wid=self.engine.pid, slots=self.engine.slots,

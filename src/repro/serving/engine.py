@@ -203,6 +203,37 @@ class EngineBase:
         self.completed: List[Request] = []
         self._prefix = (getattr(cfg, "n_meta_tokens", 0) or 0) + \
                        (getattr(cfg, "n_img_tokens", 0) or 0)
+        # opt-in observability (repro.obs): request lifecycle hops at
+        # seat/first-token/retire/handoff.  Every emission site is guarded
+        # by ``if self.tracer is not None`` so the off path (the default)
+        # executes no tracing code on the hot issue/commit path — pinned
+        # by the zero-allocation guard in tests/test_obs.py.  In cluster
+        # mode worker engines keep tracer=None; the controller records
+        # the same transitions from the protocol messages instead.
+        self.tracer = None
+
+    def metrics_snapshot(self):
+        """Flat ((name, value), ...) metrics view — computed on demand
+        from counters the engine maintains anyway (zero steady-state
+        overhead).  Workers piggyback this on every ``WorkerStatus`` so
+        the controller can aggregate fleet-wide; the in-process CLI folds
+        the same tuples via ``repro.obs.registry.merge_snapshots``."""
+        return (
+            ("engine.backlog", float(len(self.backlog))),
+            ("engine.decode_steps", float(self.n_decode_steps)),
+            ("engine.exports", float(self.n_exports)),
+            ("engine.imports", float(self.n_imports)),
+            ("engine.prefills", float(self.n_prefills)),
+            ("engine.refills", float(self.n_refills)),
+            ("engine.slots_in_use",
+             float(sum(1 for r in self.active if r is not None))),
+            ("pool.cached_blocks", float(self.pool.n_cached)),
+            ("pool.cow", float(self.pool.n_cow)),
+            ("pool.evicted", float(self.pool.n_evicted)),
+            ("pool.free_blocks", float(self.pool.n_free)),
+            ("prefix.cached_tokens", float(self.n_cached_tokens)),
+            ("prefix.hits", float(self.n_prefix_hits)),
+        )
 
     # -- scheduler predicates ------------------------------------------------
     @property
@@ -311,6 +342,10 @@ class EngineBase:
         self.slot_shared[i] = 0
         self.slot_lens[i] = 0
         self.n_exports += 1
+        if self.tracer is not None:
+            self.tracer.lifecycle.event(req.rid, "handoff_export",
+                                        self.tracer.vnow, pid=self.pid,
+                                        kv_bytes=state["kv_bytes"])
         return req, state
 
     def import_kv(self, req: Request, state: dict) -> int:
@@ -351,6 +386,9 @@ class EngineBase:
         self._import_slot_state(i, state.get("pages") or {}, req)
         self._register_prefix(i, req)
         self.n_imports += 1
+        if self.tracer is not None:
+            self.tracer.lifecycle.event(req.rid, "handoff_import",
+                                        self.tracer.vnow, pid=self.pid)
         return i
 
     # -- cost estimates (used by the demand policy) --------------------------
@@ -439,6 +477,12 @@ class EngineBase:
             self.active[i] = None
             self.slot_lens[i] = 0
         self.n_prefills += 1
+        if self.tracer is not None:
+            t = self.tracer.vnow
+            for req in wave:
+                self.tracer.lifecycle.event(req.rid, "prefill", t,
+                                            pid=self.pid,
+                                            cached_len=req.cached_len)
         return PendingOp("prefill", cost,
                          list(wave) if first is not None else [])
 
@@ -470,6 +514,9 @@ class EngineBase:
         for req in pending.stamp_first:
             if req.t_first_token is None:
                 req.t_first_token = t_end
+                if self.tracer is not None:
+                    self.tracer.lifecycle.event(req.rid, "first_token",
+                                                t_end, pid=self.pid)
         return self._finish_done(t_end)
 
     # -- one-shot wrappers (lockstep clock + direct use in tests) ------------
@@ -489,6 +536,9 @@ class EngineBase:
         self.slot_tables[i] = []
         self.slot_shared[i] = 0
         self.slot_lens[i] = 0
+        if self.tracer is not None:
+            self.tracer.lifecycle.event(req.rid, "retire", t, pid=self.pid,
+                                        tokens=len(req.tokens))
 
     def _finish_done(self, t_end: float) -> Optional[PhaseCost]:
         """Retire finished requests and refill their slots per-slot: the
@@ -522,12 +572,19 @@ class EngineBase:
                 self.slot_lens[i] = self._prefix + nxt.prompt_len
                 self.assign_order.append(nxt.rid)
                 self.n_refills += 1
+                if self.tracer is not None:
+                    self.tracer.lifecycle.event(nxt.rid, "prefill", t_cursor,
+                                                pid=self.pid, refill=True,
+                                                cached_len=nxt.cached_len)
                 t_cursor += c.duration  # refills in a tick run sequentially
                 extra = c if extra is None else extra.merge(c)
                 if tok is not None:
                     nxt.tokens.append(int(tok))
                     self.slot_tokens[i].append(int(tok))
                     nxt.t_first_token = t_cursor
+                    if self.tracer is not None:
+                        self.tracer.lifecycle.event(nxt.rid, "first_token",
+                                                    t_cursor, pid=self.pid)
                 if not nxt.done:
                     break
                 self._retire(i, nxt, t_cursor)

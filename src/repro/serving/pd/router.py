@@ -75,6 +75,7 @@ class PdRouter:
         self._in_flight = 0                  # transfer spans on the clock
         self._deferred: List[Tuple[Request, P.KvHandoff]] = []
         self._share = 0.0                    # EMA prefill share (auto mode)
+        self._flow_ids: Dict[int, int] = {}  # rid -> trace flow id
 
     # -- pools ---------------------------------------------------------------
     def _ensure_pools(self, ctl) -> None:
@@ -176,6 +177,15 @@ class PdRouter:
         dur = max(byts / rate, 1e-12)
         self._in_flight += 1
         self.n_handoffs += 1
+        if ctl.tracer is not None:
+            # the flow arrow: export on the source worker's handoff track,
+            # terminated at delivery on the destination's decode track
+            fid = ctl.tracer.flow_id()
+            self._flow_ids[req.rid] = fid
+            ctl.tracer.flow_start("spans", f"{src_wid}.handoff", "kv_handoff",
+                                  now, fid, rid=req.rid, kv_bytes=byts)
+            ctl.tracer.lifecycle.event(req.rid, "handoff_export", now,
+                                       wid=src_wid, kv_bytes=byts)
         ctl.timeline.start(
             dur, byts, key=(src_wid, "handoff"),
             on_complete=lambda sp, t, req=req, h=h, wid=src_wid:
@@ -203,6 +213,7 @@ class PdRouter:
             req.tokens = []
             req.t_first_token = None
             req.t_done = None
+            self._flow_ids.pop(req.rid, None)  # flow dies with the pool
             ctl.queue.requeue([req])
             self.n_requeued += 1
             return True
@@ -214,6 +225,14 @@ class PdRouter:
                 continue  # died at import: engine state never mutated
             if rep.ok:
                 v.outstanding[req.rid] = req
+                if ctl.tracer is not None:
+                    fid = self._flow_ids.pop(req.rid, None)
+                    if fid is not None:
+                        ctl.tracer.flow_end("spans", f"{v.wid}.decode",
+                                            "kv_handoff", now, fid,
+                                            rid=req.rid)
+                    ctl.tracer.lifecycle.event(req.rid, "handoff_import",
+                                               now, wid=v.wid)
                 return True
         return False
 

@@ -75,6 +75,10 @@ class RequestQueue:
         self.n_rejected = 0
         self.n_requeued = 0
         self.completed: List[Request] = []
+        # opt-in observability (repro.obs): admission decisions become
+        # instants on the 'queue' track + request lifecycle records; every
+        # site is guarded so the off path runs no tracing code
+        self.tracer = None
 
     def __len__(self) -> int:
         return len(self._fifo)
@@ -87,16 +91,31 @@ class RequestQueue:
                       deadline=deadline)
         if self.max_depth is not None and len(self._fifo) >= self.max_depth:
             self.n_rejected += 1
+            if self.tracer is not None:
+                self.tracer.instant("queue", 0, "reject", arrival,
+                                    rid=req.rid, why="depth")
+                self.tracer.lifecycle.event(req.rid, "reject", arrival,
+                                            why="depth")
             return None
         if self.prefix_probe is not None:
             req.cached_len = int(self.prefix_probe(req))
         if (deadline is not None and self.service_estimate is not None
                 and arrival + self.service_estimate(req) > deadline):
             self.n_rejected += 1
+            if self.tracer is not None:
+                self.tracer.instant("queue", 0, "reject", arrival,
+                                    rid=req.rid, why="deadline")
+                self.tracer.lifecycle.event(req.rid, "reject", arrival,
+                                            why="deadline")
             return None
         self._next_rid += 1
         self.n_submitted += 1
         self._fifo.append(req)
+        if self.tracer is not None:
+            self.tracer.instant("queue", 0, "admit", arrival, rid=req.rid,
+                                depth=len(self._fifo))
+            self.tracer.lifecycle.event(req.rid, "submit", arrival,
+                                        cached_len=req.cached_len)
         return req
 
     def pop(self, n: int = 1) -> List[Request]:
@@ -120,6 +139,11 @@ class RequestQueue:
         self._fifo[:0] = list(requests)
         self._fifo.sort(key=lambda r: r.rid)
         self.n_requeued += len(requests)
+        if self.tracer is not None:
+            t = self.tracer.vnow
+            for req in requests:
+                self.tracer.instant("queue", 0, "requeue", t, rid=req.rid)
+                self.tracer.lifecycle.event(req.rid, "requeue", t)
 
     def mark_done(self, req: Request) -> None:
         self.completed.append(req)

@@ -275,6 +275,22 @@ class EventScheduler:
         self._last_wave_start = -float("inf")  # demand-policy spacing state
         self._prefill_live = 0                 # prefill spans in flight
         self._spacing_timer = False            # demand release timer armed
+        # opt-in observability: policy decisions (spacing holds/releases,
+        # wave grants) as instants on the 'policy' track; every emission
+        # site is guarded so the off path runs no tracing code
+        self.tracer = None
+
+    def attach_tracer(self, tracer) -> None:
+        """Wire one tracer through the whole in-process stack: the
+        timeline (span begin/end + the bw counter track), the queue
+        (admission instants), every engine (request lifecycles), and this
+        scheduler's policy decisions.  The tracer's clock becomes the
+        shared contention timeline."""
+        self.tracer = tracer
+        self.timeline.attach_tracer(tracer)
+        self.queue.tracer = tracer
+        for e in self.engines:
+            e.tracer = tracer
 
     # -- dispatch: keep engine backlogs fed from the global queue -----------
     def _dispatch(self) -> None:
@@ -292,9 +308,15 @@ class EventScheduler:
 
             def _release(t: float) -> None:
                 self._spacing_timer = False
+                if self.tracer is not None:
+                    self.tracer.instant("policy", 0, "spacing_release", t)
                 self._pump(t)
 
             self.timeline.call_at(self._last_wave_start + spacing, _release)
+            if self.tracer is not None:
+                self.tracer.instant("policy", 0, "spacing_hold", now,
+                                    pid=e.pid, spacing=spacing,
+                                    open_at=self._last_wave_start + spacing)
         return False
 
     # -- op issue / completion ----------------------------------------------
@@ -355,6 +377,10 @@ class EventScheduler:
             cand.sort(key=lambda e: e.backlog[0].arrival)  # FIFO urgency
         for e in cand:
             if self.policy != "none" and self._prefill_live > 0:
+                if self.tracer is not None:
+                    self.tracer.instant("policy", 0, "stagger_hold", now,
+                                        pid=e.pid,
+                                        live_prefills=self._prefill_live)
                 break  # serialized: retried when the live prefill commits
             if self.policy == "demand" and not self._demand_clear(e, now):
                 break  # retried when the release timer fires
@@ -362,6 +388,9 @@ class EventScheduler:
                 self._rr = (e.pid + 1) % len(self.engines)
             if self.policy == "demand":
                 self._last_wave_start = now
+            if self.tracer is not None:
+                self.tracer.instant("policy", 0, "wave_grant", now,
+                                    pid=e.pid, policy=self.policy)
             self._issue(e, "prefill", now)
 
     def run(self, max_spans: Optional[int] = None) -> ServingMetrics:
