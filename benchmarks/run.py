@@ -12,7 +12,7 @@ def main() -> None:
     from . import (fig1_bandwidth_over_time, fig2_weight_ratio,
                    fig4_std_vs_cores, fig5_partition_sweep,
                    fig6_traffic_trace, table1_resnet_layers)
-    from . import roofline_report, serving_shaping
+    from . import roofline_report, serving_shaping, serving_soak
 
     print("name,us_per_call,derived")
     failures = []
@@ -33,6 +33,8 @@ def main() -> None:
         (serving_shaping.run_cluster, ()),   # multiprocess cluster dispatch
         (serving_shaping.run_pd, ()),        # prefill/decode disaggregation
         (serving_shaping.run_trace_fidelity, ()),  # trace==metrics invariant
+        (serving_soak.run_soak, ()),       # open-loop goodput soak
+        (serving_soak.run_chaos_soak, ()),  # kill+join under load (socket)
         (roofline_report.run, ()),
     ]:
         name = f"{fn.__module__}.{fn.__name__}"

@@ -791,6 +791,8 @@ def main(argv=None):
                     help="transport for the cluster-dispatch scenario")
     ap.add_argument("--no-cluster", action="store_true",
                     help="skip the cluster-dispatch scenario")
+    ap.add_argument("--no-soak", action="store_true",
+                    help="skip the open-loop goodput soak scenario")
     ap.add_argument("--json", default="BENCH_serving.json",
                     help="path for the machine-readable metrics artifact")
     args = ap.parse_args(argv)
@@ -824,9 +826,19 @@ def main(argv=None):
     run_trace_fidelity(args.arch, smoke=args.smoke, n_requests=n_req,
                        total_slots=args.slots, prompt_len=args.prompt_len,
                        gen=args.gen)
+    if not args.no_soak:
+        from .serving_soak import run_soak  # lazy: soak pulls loadgen
+        run_soak(args.arch, smoke=args.smoke, total_slots=args.slots,
+                 prompt_len=args.prompt_len, gen=args.gen)
     out = write_bench_json(args.json)
     print(f"# wrote {out} ({len(SCENARIOS)} scenarios)")
 
 
 if __name__ == "__main__":
-    main()
+    # re-enter under the canonical module name: ``python -m`` executes this
+    # file as ``__main__``, and the soak's ``from .serving_shaping import
+    # SCENARIOS`` would otherwise bind a SECOND module instance whose cells
+    # never reach write_bench_json
+    from benchmarks.serving_shaping import main as _main
+
+    _main()

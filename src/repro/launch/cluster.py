@@ -30,7 +30,9 @@ from repro.core import hw
 from repro.obs import (Tracer, format_summary, observe_phase_durations,
                        write_chrome)
 from repro.profiling import COST_MODELS
-from repro.serving import RequestQueue, decode_cost, prefill_cost
+from repro.serving import (ARRIVALS, LengthMix, RequestQueue, SloSpec,
+                           decode_cost, goodput_stats, make_trace,
+                           prefill_cost, schedule_arrivals)
 from repro.serving.cluster import (ROUTERS, TRANSPORTS, make_cluster,
                                    make_worker_specs)
 from repro.serving.trace_sim import phase_balanced_bandwidth
@@ -53,8 +55,11 @@ def build_cluster_args(ap: argparse.ArgumentParser) -> None:
                          "split")
     ap.add_argument("--transport", default="mp", choices=list(TRANSPORTS),
                     help="worker transport: 'mp' spawns one OS process per "
-                         "worker; 'loopback' runs the same protocol "
-                         "in-process (deterministic)")
+                         "worker over multiprocessing pipes; 'socket' "
+                         "spawns the same workers dialing a TCP listener "
+                         "(length-prefixed frames, the cross-host wire "
+                         "format; see docs/multi_host.md); 'loopback' runs "
+                         "the same protocol in-process (deterministic)")
     ap.add_argument("--heartbeat-timeout", type=float, default=60.0,
                     help="wall seconds of silence before a worker is "
                          "declared dead and its requests fail over")
@@ -107,6 +112,55 @@ def build_cluster_args(ap: argparse.ArgumentParser) -> None:
                          "(see docs/observability.md)")
 
 
+def build_load_args(ap: argparse.ArgumentParser) -> None:
+    """Open-loop offered-load axis (cluster CLI + soak benchmark only; the
+    in-process ``serve.py`` stays closed-loop)."""
+    ap.add_argument("--arrival", default="batch",
+                    choices=["batch"] + list(ARRIVALS),
+                    help="offered-load model: 'batch' queues --requests "
+                         "up front at t=0 (closed-loop, the default); "
+                         "poisson/diurnal/bursty inject a seeded open-loop "
+                         "trace at virtual arrival instants (see "
+                         "repro.serving.loadgen and docs/multi_host.md)")
+    ap.add_argument("--rps", type=float, default=1e6,
+                    help="mean offered arrival rate in requests per "
+                         "VIRTUAL second (the contention clock runs on a "
+                         "microsecond scale for smoke workloads, so rates "
+                         "are order 1e5-1e7); only with --arrival != batch")
+    ap.add_argument("--horizon", type=float, default=None,
+                    help="virtual seconds of offered load; default "
+                         "--requests / --rps so --requests keeps meaning "
+                         "'expected request count' in open-loop mode")
+    ap.add_argument("--slo-ttft", type=float, default=None, metavar="S",
+                    help="per-request SLO: virtual-seconds TTFT budget "
+                         "(deadline = arrival + ttft + tpot * gen); "
+                         "requires --arrival != batch")
+    ap.add_argument("--slo-tpot", type=float, default=None, metavar="S",
+                    help="per-request SLO: virtual-seconds per-decode-"
+                         "token budget; requires --arrival != batch")
+
+
+def validate_load_args(ap: argparse.ArgumentParser, args) -> None:
+    """Parse-time validation of the offered-load axis."""
+    if args.rps <= 0:
+        ap.error(f"--rps must be > 0 requests per virtual second "
+                 f"(got {args.rps})")
+    if args.horizon is not None and args.horizon <= 0:
+        ap.error(f"--horizon must be > 0 virtual seconds "
+                 f"(got {args.horizon})")
+    if args.arrival == "batch":
+        for flag, val in (("--slo-ttft", args.slo_ttft),
+                          ("--slo-tpot", args.slo_tpot)):
+            if val is not None:
+                ap.error(f"{flag} prices an open-loop arrival trace; with "
+                         "--arrival batch use --deadline (an absolute "
+                         "virtual-clock deadline) instead")
+    for flag, val in (("--slo-ttft", args.slo_ttft),
+                      ("--slo-tpot", args.slo_tpot)):
+        if val is not None and val <= 0:
+            ap.error(f"{flag} must be > 0 virtual seconds (got {val})")
+
+
 def validate_cluster_args(ap: argparse.ArgumentParser, args) -> None:
     """Parse-time validation of the shared cluster axis (both CLIs call
     this so a bad flag dies with ``ap.error`` instead of a downstream
@@ -157,9 +211,12 @@ def run_cluster(*, arch: str, smoke: bool, workers: int, slots: int,
                 quiet: bool = False, cost_model: str = "analytic",
                 profile=None, pd_split=None, prefix_cache: bool = False,
                 kv_dtype: str = "fp32", sparse_threshold: float = 0.0,
-                trace=None):
+                trace=None, arrival: str = "batch", rps: float = 1e6,
+                horizon=None, slo_ttft=None, slo_tpot=None):
     """Build the request load + worker fleet, run it, print the summary.
-    Returns (controller, metrics)."""
+    ``arrival='batch'`` queues ``n_requests`` at t=0 (closed-loop);
+    poisson/diurnal/bursty inject an open-loop ``loadgen`` trace at virtual
+    arrival instants and report goodput.  Returns (controller, metrics)."""
     if profile is not None and cost_model != "measured":
         raise ValueError(
             f"--profile {profile} only applies to --cost-model measured; "
@@ -195,7 +252,11 @@ def run_cluster(*, arch: str, smoke: bool, workers: int, slots: int,
         router_arg = router
     cfg = get_config(arch, smoke=smoke)
     peak_per_worker = hw.TPU_PEAK_FLOPS / workers
-    max_len = prompt_len + 4 * gen + (cfg.n_meta_tokens or 0) + \
+    # open-loop length mixes are heavy-tailed up to 2x the nominal lengths,
+    # so the worker context budget follows the caps, not the medians
+    p_cap = prompt_len if arrival == "batch" else 2 * prompt_len
+    g_cap = gen if arrival == "batch" else 2 * gen
+    max_len = p_cap + 4 * g_cap + (cfg.n_meta_tokens or 0) + \
         (cfg.n_img_tokens or 0)
 
     if prefix_cache and dense:
@@ -223,10 +284,26 @@ def run_cluster(*, arch: str, smoke: bool, workers: int, slots: int,
     if trace is not None:
         tracer = Tracer()
         queue.tracer = tracer
-    rng = np.random.default_rng(seed)
-    for _ in range(n_requests):
-        queue.submit(rng.integers(1, cfg.vocab, size=(prompt_len,))
-                     .astype(np.int32), gen, arrival=0.0, deadline=deadline)
+    offered = None
+    if arrival == "batch":
+        rng = np.random.default_rng(seed)
+        for _ in range(n_requests):
+            queue.submit(rng.integers(1, cfg.vocab, size=(prompt_len,))
+                         .astype(np.int32), gen, arrival=0.0,
+                         deadline=deadline)
+    else:
+        slo = None
+        if slo_ttft is not None or slo_tpot is not None:
+            slo = SloSpec(ttft_budget=slo_ttft or 0.0,
+                          tpot_budget=slo_tpot or 0.0)
+        mix = LengthMix(prompt_median=prompt_len,
+                        prompt_min=max(1, prompt_len // 4),
+                        prompt_max=p_cap, gen_median=gen, gen_min=1,
+                        gen_max=g_cap)
+        if horizon is None:
+            horizon = n_requests / rps  # --requests = expected count
+        offered = make_trace(arrival, rps, horizon, seed=seed, mix=mix,
+                             slo=slo, vocab=cfg.vocab)
 
     bandwidth = phase_balanced_bandwidth(
         cfg, total_slots=workers * slots, prompt_len=prompt_len, gen=gen)
@@ -243,6 +320,11 @@ def run_cluster(*, arch: str, smoke: bool, workers: int, slots: int,
                        heartbeat_timeout=heartbeat_timeout)
     if tracer is not None:
         ctl.attach_tracer(tracer)
+    if offered is not None:
+        # open-loop: requests land on the virtual clock whether or not the
+        # fleet keeps up; ctl.run() drains arrivals and service together
+        schedule_arrivals(ctl.timeline, queue, offered,
+                          on_arrival=ctl.pump)
     m = ctl.run()
     if not quiet:
         s = m.summary()
@@ -261,6 +343,12 @@ def run_cluster(*, arch: str, smoke: bool, workers: int, slots: int,
               f"completed={s['requests_completed']}/{queue.n_submitted} "
               f"rejected={queue.n_rejected} requeued={queue.n_requeued} "
               f"failovers={ctl.n_failovers}")
+        if offered is not None:
+            gs = goodput_stats(queue)
+            print(f"  load: arrival={arrival} rps={rps:g} "
+                  f"horizon={horizon:g} offered={int(gs['offered'])} "
+                  f"attained={int(gs['attained'])} late={int(gs['late'])} "
+                  f"goodput={gs['goodput']:.3f}")
         # the shared summary formatter (repro.obs.format_summary): the
         # fleet registry comes from the worker snapshots piggybacked on
         # WorkerStatus, so the cluster CLI reports the same prefix-cache
@@ -304,6 +392,7 @@ def main(argv=None):
     ap.add_argument("--max-queue", type=int, default=None)
     ap.add_argument("--deadline", type=float, default=None)
     build_cluster_args(ap)
+    build_load_args(ap)
     args = ap.parse_args(argv)
     if args.workers < 1:
         ap.error(f"--workers must be >= 1 (got {args.workers})")
@@ -312,6 +401,7 @@ def main(argv=None):
     if args.requests < 1:
         ap.error(f"--requests must be >= 1 (got {args.requests})")
     validate_cluster_args(ap, args)
+    validate_load_args(ap, args)
     if args.pd_split is not None and sum(args.pd_split) != args.workers:
         ap.error(f"--pd-split {args.pd_split[0]}:{args.pd_split[1]} does "
                  f"not cover the {args.workers}-worker fleet")
@@ -325,7 +415,9 @@ def main(argv=None):
                 cost_model=args.cost_model, profile=args.profile,
                 pd_split=args.pd_split, prefix_cache=args.prefix_cache,
                 kv_dtype=args.kv_dtype,
-                sparse_threshold=args.sparse_threshold, trace=args.trace)
+                sparse_threshold=args.sparse_threshold, trace=args.trace,
+                arrival=args.arrival, rps=args.rps, horizon=args.horizon,
+                slo_ttft=args.slo_ttft, slo_tpot=args.slo_tpot)
 
 
 if __name__ == "__main__":

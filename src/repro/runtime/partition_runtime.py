@@ -43,11 +43,19 @@ class PartitionState:
 
 class PartitionRuntime:
     def __init__(self, api, train_step, pc: PartitionConfig, key,
-                 max_stale: int | None = None):
+                 max_stale: int | None = None, accum: int = 1,
+                 global_batch: int = 0):
         self.api = api
         self.train_step = jax.jit(train_step, donate_argnums=(0, 1))
         self.pc = pc
         self.max_stale = max_stale or 4 * pc.sync_every
+        # grad-accumulation factor callers microbatch by; rescaled via
+        # elastic.accum_for_batch on every membership change so the global
+        # batch survives down-scale (recovery flow step 3, runtime/elastic)
+        self.accum = int(accum)
+        self.global_batch = int(global_batch)
+        self._accum0 = self.accum
+        self._parts0 = pc.partitions
         params = api.init(key)
         opt = adamw_init(params)
         self.parts = [
@@ -118,6 +126,7 @@ class PartitionRuntime:
         """Simulated node failure: partition i's work since last sync is
         lost; its data shard is rebalanced to the survivors."""
         self.parts[i].alive = False
+        self._rescale_accum()
 
     def add_partition(self, i: int | None = None):
         """Replacement capacity joins: clone current synced params."""
@@ -129,6 +138,16 @@ class PartitionRuntime:
             self.parts[i] = st
         else:
             self.parts.append(st)
+        self._rescale_accum()
+
+    def _rescale_accum(self):
+        from repro.runtime import elastic
+        alive = len(self.alive_parts())
+        if alive:
+            # absolute, not incremental: re-derive from the initial fleet
+            # so a drop followed by a replacement lands back at accum0
+            self.accum = elastic.accum_for_batch(
+                self.global_batch, self._parts0, alive, self._accum0)
 
     # -- training loop -------------------------------------------------------
 

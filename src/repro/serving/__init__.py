@@ -11,7 +11,10 @@ the legacy lockstep tick (regression oracle).  ``queue`` handles
 admission/deadlines, ``kv_pool`` owns the paged KV-cache block pool behind
 per-slot continuous batching, ``metrics`` observes per-span demand, and
 ``trace_sim`` validates the std-reduction claim with the Fig. 5 fluid
-simulation on the very same timeline.  Phase pricing comes from each
+simulation on the very same timeline.  ``loadgen`` generates open-loop
+offered load (seeded Poisson/diurnal/bursty arrivals, heavy-tailed length
+mixes, per-request SLO deadlines) and scores goodput — the traffic model
+behind ``benchmarks/serving_soak.py``.  Phase pricing comes from each
 engine's ``repro.profiling`` cost model — analytic by default, on-device
 measured durations via ``cost_model=`` (see ``docs/cost_models.md``).  ``cluster`` lifts the fleet out of
 the process: a message-protocol controller routes requests to N partition
@@ -25,6 +28,10 @@ from repro.serving.engine import (EngineBase, PartitionEngine, PendingOp,
                                   PhaseCost, SimulatedEngine, decode_cost,
                                   prefill_cost, prefill_cost_ragged)
 from repro.serving.kv_pool import BlockPool, PoolExhausted
+from repro.serving.loadgen import (ARRIVALS, LengthMix, OfferedRequest,
+                                   SloSpec, goodput_stats, make_arrivals,
+                                   make_trace, schedule_arrivals,
+                                   submit_trace)
 from repro.serving.metrics import ServingMetrics
 from repro.serving.pd import PdRouter
 from repro.serving.queue import Request, RequestQueue
@@ -40,6 +47,8 @@ __all__ = [
     "SimulatedEngine", "decode_cost", "prefill_cost", "prefill_cost_ragged",
     "BlockPool", "PdRouter", "PoolExhausted", "ServingMetrics", "Request",
     "RequestQueue",
+    "ARRIVALS", "LengthMix", "OfferedRequest", "SloSpec", "goodput_stats",
+    "make_arrivals", "make_trace", "schedule_arrivals", "submit_trace",
     "CLOCKS", "POLICIES", "EventScheduler", "PhaseStaggeredScheduler",
     "SpanRecord", "TickRecord", "make_scheduler", "serving_tasklists",
     "serving_trace_report",

@@ -31,8 +31,8 @@ from repro.serving.cluster.controller import (ROUTERS, ClusterController,
                                               RoundRobinRouter, WorkerView,
                                               make_router)
 from repro.serving.cluster.transport import (TRANSPORTS, LoopbackTransport,
-                                             PipeTransport, WorkerGone,
-                                             make_transport)
+                                             PipeTransport, SocketTransport,
+                                             WorkerGone, make_transport)
 from repro.serving.cluster.worker import (WorkerRuntime, WorkerSpec,
                                           build_engine, worker_main)
 from repro.serving.metrics import ServingMetrics
@@ -89,8 +89,8 @@ def make_cluster(specs: List[WorkerSpec], queue: RequestQueue, *,
 __all__ = [
     "ClusterController", "ClusterError", "LoopbackTransport",
     "PipeTransport", "ROUTERS", "RoundRobinRouter", "ShapingRouter",
-    "ShortestBacklogRouter", "ServingMetrics", "TRANSPORTS", "WorkerGone",
-    "WorkerRuntime", "WorkerSpec", "WorkerView", "build_engine",
-    "make_cluster", "make_router", "make_transport", "make_worker_specs",
-    "worker_main",
+    "ShortestBacklogRouter", "ServingMetrics", "SocketTransport",
+    "TRANSPORTS", "WorkerGone", "WorkerRuntime", "WorkerSpec", "WorkerView",
+    "build_engine", "make_cluster", "make_router", "make_transport",
+    "make_worker_specs", "worker_main",
 ]

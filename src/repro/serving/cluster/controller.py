@@ -38,13 +38,16 @@ Routing policies (the pluggable placement + prefill-grant rule):
                      phases overlap by construction instead of by
                      stagger.  See ``docs/pd_disaggregation.md``.
 
-Routers may additionally implement three optional hooks the controller
-calls with ``getattr`` fallbacks (so pre-existing custom routers keep
-working): ``decode_candidates(ctl)`` restricts which views get the
-otherwise never-gated decode issue; ``unserved(ctl)`` counts requests the
-router holds in limbo (e.g. a KV handoff on the wire) so ``run()`` does
-not mistake them for a drained cluster; ``on_worker_died(ctl, view,
-now)`` observes failovers.
+Routers may additionally implement optional hooks the controller calls
+with ``getattr`` fallbacks (so pre-existing custom routers keep working):
+``decode_candidates(ctl)`` restricts which views get the otherwise
+never-gated decode issue; ``unserved(ctl)`` counts requests the router
+holds in limbo (e.g. a KV handoff on the wire) so ``run()`` does not
+mistake them for a drained cluster; ``on_worker_died(ctl, view, now)``
+observes failovers; ``on_worker_joined(ctl, view, now)`` /
+``on_worker_left(ctl, view, now)`` observe elastic membership changes
+(``join_worker`` / ``drain_worker``) so stateful routers — the PD pool
+split — rebalance when the fleet grows or shrinks.
 
 Failure handling: a worker that crashes (pipe EOF), hangs past the
 transport's heartbeat timeout, or is ``kill()``-ed mid-run is marked dead
@@ -84,6 +87,9 @@ class WorkerView:
         self.max_len = hello.max_len
         self.status = hello.status
         self.alive = True
+        # elastic scale-down: a draining worker takes no NEW placements but
+        # finishes everything it holds, then leaves via Shutdown -> Bye
+        self.draining = False
         self.span: Optional[Span] = None
         self.outstanding: Dict[int, Request] = {}
 
@@ -101,7 +107,7 @@ class RoundRobinRouter:
     def place(self, ctl: "ClusterController", now: float) -> None:
         # the in-process dispatch rule (_top_up_backlogs): keep every
         # worker's backlog topped up to one wave, in wid order
-        for v in ctl.views_alive():
+        for v in ctl.views_placeable():
             need = v.slots - v.status.backlog_len
             if need > 0 and len(ctl.queue):
                 ctl.assign(v, ctl.queue.pop(need), now)
@@ -121,7 +127,7 @@ class ShortestBacklogRouter(RoundRobinRouter):
     name = "shortest_backlog"
 
     def place(self, ctl: "ClusterController", now: float) -> None:
-        views = ctl.views_alive()
+        views = ctl.views_placeable()
         if not views or not len(ctl.queue):
             return
         load = {v.wid: v.status.backlog_len + v.status.n_active
@@ -231,10 +237,16 @@ class ClusterController:
         self.metrics = metrics if metrics is not None else ServingMetrics()
         self.timeline = ContentionTimeline(bandwidth)
         self.bandwidth = float(bandwidth)
+        self.startup_timeout = float(startup_timeout)
         self.trace: List[SpanRecord] = []
         self.prefill_live = 0
         self.n_failovers = 0
         self.failed_workers: List[int] = []
+        # elastic membership bookkeeping (join_worker / drain_worker)
+        self.n_joins = 0
+        self.n_departures = 0
+        self.departed_workers: List[int] = []
+        self._departed_status: List[P.WorkerStatus] = []
         # opt-in observability (repro.obs): the controller records the
         # whole fleet's trace — worker engines keep tracer=None, so the
         # loopback and subprocess transports trace identically and no op
@@ -269,8 +281,9 @@ class ClusterController:
         Only the LAST snapshot per worker counts — the snapshots are
         cumulative, so folding every reply would multiply-count."""
         from repro.obs import merge_snapshots
-        return merge_snapshots(v.status.metrics
-                               for v in self.views_in_order())
+        return merge_snapshots(
+            [s.metrics for s in self._departed_status]
+            + [v.status.metrics for v in self.views_in_order()])
 
     # -- mirrors -------------------------------------------------------------
     def views_in_order(self) -> List[WorkerView]:
@@ -278,6 +291,12 @@ class ClusterController:
 
     def views_alive(self) -> List[WorkerView]:
         return [v for v in self.views_in_order() if v.alive]
+
+    def views_placeable(self) -> List[WorkerView]:
+        """Alive views that accept NEW work (draining workers still decode
+        and prefill their remaining backlog, but place nothing fresh)."""
+        return [v for v in self.views_in_order()
+                if v.alive and not v.draining]
 
     @property
     def n_alive(self) -> int:
@@ -421,8 +440,95 @@ class ClusterController:
             if self.tracer is not None:
                 self.tracer.instant("cluster", v.wid, "heartbeat",
                                     self.timeline.now, wid=v.wid)
-            self._rpc(v, P.Ping(t_wall=t_wall), self.timeline.now)
+            self._rpc(v, P.Ping(t_wall=t_wall,
+                                t_virtual=self.timeline.now),
+                      self.timeline.now)
         return {wid: v.alive for wid, v in self.views.items()}
+
+    # -- elastic membership --------------------------------------------------
+    def join_worker(self, spec) -> WorkerView:
+        """Elastic scale-up: bring one more worker into the running fleet.
+
+        The transport spawns/attaches it, its ``Hello`` (the one message a
+        worker may send unprompted) becomes a ``WorkerView``, the router's
+        optional ``on_worker_joined`` hook assigns it a role, and a pump
+        immediately offers it work.  A wid that previously failed may be
+        replaced; a live wid may not."""
+        now = self.timeline.now
+        old = self.views.get(spec.wid)
+        if old is not None and old.alive:
+            raise ValueError(f"worker {spec.wid} is already in the fleet")
+        self.transport.add_worker(spec)
+        try:
+            hello = self.transport.recv(spec.wid,
+                                        timeout=self.startup_timeout)
+        except WorkerGone as e:
+            raise ClusterError(
+                f"joining worker {spec.wid} never completed the "
+                f"handshake") from e
+        if not isinstance(hello, P.Hello):
+            raise ClusterError(f"worker {spec.wid}: expected Hello, got "
+                               f"{type(hello).__name__}")
+        v = WorkerView(hello)
+        self.views[v.wid] = v
+        self.n_joins += 1
+        if self.tracer is not None:
+            self.tracer.instant("cluster", v.wid, "join", now, wid=v.wid)
+        on_joined = getattr(self.router, "on_worker_joined", None)
+        if on_joined is not None:
+            on_joined(self, v, now)
+        self.pump(now)
+        return v
+
+    def drain_worker(self, wid: int) -> None:
+        """Elastic scale-down, drain-then-``Bye``: stop placing NEW work on
+        the worker; everything it already holds (backlog included) finishes
+        normally — grants and decode steps keep flowing — and the moment it
+        holds nothing the controller runs the graceful Shutdown -> Bye
+        exchange and retires it from the fleet.  No request is ever
+        dropped.  Refuses to drain the last placeable worker (the queue
+        could never drain)."""
+        v = self.views.get(wid)
+        if v is None or not v.alive:
+            raise ValueError(f"worker {wid} is not alive")
+        if v.draining:
+            return
+        if not [u for u in self.views_placeable() if u.wid != wid]:
+            raise ValueError("cannot drain the last placeable worker")
+        v.draining = True
+        if self.tracer is not None:
+            self.tracer.instant("cluster", wid, "drain", self.timeline.now,
+                                wid=wid)
+        self._finish_drains(self.timeline.now)
+
+    def _finish_drains(self, now: float) -> None:
+        for v in list(self.views.values()):
+            if not (v.alive and v.draining):
+                continue
+            if v.span is not None or v.outstanding:
+                continue  # still working; checked again after every pump
+            try:
+                self.transport.send(v.wid, P.Shutdown())
+                bye = self.transport.recv(v.wid)
+                if not isinstance(bye, P.Bye):
+                    raise ClusterError(f"worker {v.wid}: expected Bye, got "
+                                       f"{type(bye).__name__}")
+            except WorkerGone:
+                pass  # died holding nothing: there is nothing to fail over
+            retire = getattr(self.transport, "retire", None)
+            if retire is not None:
+                retire(v.wid)
+            v.alive = False
+            self.n_departures += 1
+            self.departed_workers.append(v.wid)
+            self._departed_status.append(v.status)
+            del self.views[v.wid]
+            if self.tracer is not None:
+                self.tracer.instant("cluster", v.wid, "leave", now,
+                                    wid=v.wid)
+            on_left = getattr(self.router, "on_worker_left", None)
+            if on_left is not None:
+                on_left(self, v, now)
 
     # -- the pump ------------------------------------------------------------
     def pump(self, now: float) -> None:
@@ -454,6 +560,7 @@ class ClusterController:
                 if v.alive and v.span is None and v.status.wants_prefill]
         if cand:
             self.router.grant(self, cand, now)
+        self._finish_drains(now)
 
     # -- drive ---------------------------------------------------------------
     def _unserved(self) -> int:

@@ -228,7 +228,15 @@ class ImportKv:
 
 @dataclass(frozen=True)
 class Ping:
+    """Heartbeat.  ``t_virtual`` is the cross-host virtual-clock export:
+    the controller's ``ContentionTimeline.now`` at send.  Every op a worker
+    runs is priced worker-side but *placed* controller-side (the one fleet
+    clock), so workers never advance virtual time themselves — the
+    heartbeat stream is how a remote host observes fleet-virtual now
+    between its own commits (``CommitOp.t_end`` carries it at every
+    commit).  Defaults keep old pickles decodable."""
     t_wall: float = 0.0
+    t_virtual: float = 0.0
 
 
 @dataclass(frozen=True)
@@ -295,8 +303,12 @@ class KvImported:
 
 @dataclass(frozen=True)
 class Pong:
+    """Heartbeat ack.  ``t_virtual`` echoes the worker's fleet-virtual
+    clock (the max of every ``Ping.t_virtual`` / ``CommitOp.t_end`` it has
+    seen) so the controller can assert clock export took."""
     t_wall: float
     status: WorkerStatus
+    t_virtual: float = 0.0
 
 
 @dataclass(frozen=True)

@@ -31,6 +31,9 @@ class WorkerRuntime:
     def __init__(self, engine: EngineBase):
         self.engine = engine
         self._pending: Optional[PendingOp] = None
+        # fleet-virtual clock as last exported by the controller (every
+        # CommitOp.t_end and Ping.t_virtual); the worker never advances it
+        self.vnow = 0.0
 
     # -- status snapshot -----------------------------------------------------
     def status(self) -> P.WorkerStatus:
@@ -89,6 +92,7 @@ class WorkerRuntime:
                               status=self.status())
         if isinstance(msg, P.CommitOp):
             assert self._pending is not None, "commit with no issued op"
+            self.vnow = max(self.vnow, msg.t_end)
             pend, self._pending = self._pending, None
             extra = self.engine.commit_op(pend, msg.t_end)
             retired = tuple(
@@ -116,7 +120,9 @@ class WorkerRuntime:
                                     status=self.status())
             return P.KvImported(ok=True, reason="", status=self.status())
         if isinstance(msg, P.Ping):
-            return P.Pong(t_wall=msg.t_wall, status=self.status())
+            self.vnow = max(self.vnow, msg.t_virtual)
+            return P.Pong(t_wall=msg.t_wall, status=self.status(),
+                          t_virtual=self.vnow)
         if isinstance(msg, P.Shutdown):
             return P.Bye(n_prefills=self.engine.n_prefills,
                          n_refills=self.engine.n_refills,
@@ -163,18 +169,23 @@ class WorkerSpec:
 
 
 def _partition_mesh(spec: WorkerSpec):
-    """Pin the worker to its ``make_partition_submesh`` group when the host
-    has the devices for it; otherwise run on default placement (CPU dev
-    boxes).  Returns a context manager either way."""
+    """Pin the worker to the mesh ``runtime.elastic.submesh_plan`` picks
+    for this host: the full ``make_partition_submesh`` group when the
+    devices are there, a narrower data axis when the host lost chips (the
+    elastic re-join path), or default placement (CPU dev boxes).  Returns
+    a context manager either way."""
     import jax
 
     from repro.launch import mesh as M
+    from repro.runtime.elastic import submesh_plan
 
-    if spec.partitions > 1 and M.DATA_AXIS % spec.partitions == 0:
-        need = (M.DATA_AXIS // spec.partitions) * M.MODEL_AXIS
-        if len(jax.devices()) >= need:
-            return M.mesh_context(M.make_partition_submesh(spec.partitions))
-    return nullcontext()
+    plan = submesh_plan(len(jax.devices()), spec.partitions,
+                        data_axis=M.DATA_AXIS, model_axis=M.MODEL_AXIS)
+    if plan is None:
+        return nullcontext()
+    if plan == (M.DATA_AXIS // spec.partitions, M.MODEL_AXIS):
+        return M.mesh_context(M.make_partition_submesh(spec.partitions))
+    return M.mesh_context(M.make_host_mesh(*plan))
 
 
 def build_engine(spec: WorkerSpec) -> EngineBase:

@@ -119,7 +119,30 @@ class PdRouter:
         return self._in_flight + len(self._deferred)
 
     def on_worker_died(self, ctl, v, now: float) -> None:
-        pass  # pool membership is static; live-view filters do the rest
+        pass  # pool membership is sticky; live-view filters do the rest
+
+    def on_worker_joined(self, ctl, v, now: float) -> None:
+        """Elastic join: seat the newcomer in whichever pool sits further
+        below its demand-EMA target — the same signal ``_rebalance``
+        steers by — or simply the smaller live pool before any demand
+        signal has accumulated."""
+        if not self.pool_of:
+            return  # pools not formed yet: _ensure_pools covers everyone
+        self.pool_of.pop(v.wid, None)  # a replaced wid sheds its old role
+        pre = self._pool_live(ctl, "prefill")
+        dec = self._pool_live(ctl, "decode")
+        if self._share > 0:
+            n = len(pre) + len(dec) + 1
+            target = min(max(int(round(n * self._share)), 1), n - 1)
+            pool = "prefill" if len(pre) < target else "decode"
+        else:
+            pool = "prefill" if len(pre) < len(dec) else "decode"
+        self.pool_of[v.wid] = pool
+
+    def on_worker_left(self, ctl, v, now: float) -> None:
+        """Elastic leave (drain-then-Bye): the departed wid leaves its
+        pool; ``_rebalance`` repairs a collapsed phase on the next pump."""
+        self.pool_of.pop(v.wid, None)
 
     # -- placement + migration ----------------------------------------------
     def place(self, ctl, now: float) -> None:
@@ -131,8 +154,9 @@ class PdRouter:
         self._admit(ctl, now)
 
     def _admit(self, ctl, now: float) -> None:
-        """Least-loaded placement onto the prefill pool, one wave deep."""
-        views = self.prefill_views(ctl)
+        """Least-loaded placement onto the prefill pool, one wave deep.
+        Draining workers take nothing new (elastic scale-down)."""
+        views = [v for v in self.prefill_views(ctl) if not v.draining]
         if not views or not len(ctl.queue):
             return
         load = {v.wid: v.status.backlog_len + v.status.n_active
@@ -217,7 +241,8 @@ class PdRouter:
             ctl.queue.requeue([req])
             self.n_requeued += 1
             return True
-        cands = [v for v in dec if v.status.n_active < v.slots]
+        cands = [v for v in dec
+                 if v.status.n_active < v.slots and not v.draining]
         for v in sorted(cands,
                         key=lambda v: (v.status.n_active, v.wid)):
             rep = ctl._rpc(v, P.ImportKv(handoff=h), now)

@@ -1,0 +1,249 @@
+"""Fault-injection suite: the elastic fleet under deliberate abuse.
+
+Every scenario here injects a fault at a deterministic virtual-clock
+instant and pins the same invariants the chaos soak
+(``benchmarks/serving_soak.py --chaos``) gates on:
+
+  * SIGKILL mid-wave (socket transport: a real ``kill -9`` on the worker
+    process) — the frame stream hits EOF, the controller fails the worker
+    over, its unfinished requests requeue in admission order, and the run
+    completes with ZERO lost requests;
+  * SIGSTOP half-open (socket): the process is alive but silent — frames
+    neither flow nor EOF.  Only the wall-clock heartbeat timeout can
+    unmask it; the run must still complete losslessly;
+  * elastic join mid-run (loopback + socket): a newcomer's ``Hello``
+    becomes a placeable view that actually serves load;
+  * drain-then-Bye (loopback + socket): scale-down loses nothing and the
+    departed worker's counters stay in the fleet metrics;
+  * PD rebalance: the disaggregated router seats joiners in a pool and
+    sheds leavers from theirs;
+  * the cross-host virtual-clock export (``Ping.t_virtual`` /
+    ``Pong.t_virtual``) survives the wire on every transport.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import hw
+from repro.serving import PdRouter, RequestQueue, make_cluster, \
+    make_worker_specs
+from repro.serving.cluster import make_transport
+from repro.serving.cluster import protocol as P
+
+ARCH = "qwen2-7b"
+
+
+def _load(queue, n, prompt_len=8, gen=4):
+    rng = np.random.default_rng(0)
+    for _ in range(n):
+        queue.submit(rng.integers(1, 100, size=(prompt_len,))
+                     .astype(np.int32), gen)
+
+
+def _specs(partitions, **kw):
+    return make_worker_specs(ARCH, partitions, **kw)
+
+
+def _spec_like(specs, wid):
+    return dataclasses.replace(specs[0], wid=wid)
+
+
+# ---------------------------------------------------------------------------
+# SIGKILL mid-wave over TCP
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kill_t", [1e-8, 1e-7, 1e-6])
+def test_socket_sigkill_mid_wave_is_lossless(kill_t):
+    """A real SIGKILL lands while the victim holds granted work; the TCP
+    stream EOFs, the failover requeues everything it held, and the
+    survivors finish the entire load."""
+    q = RequestQueue()
+    _load(q, 20, gen=5)
+    ctl = make_cluster(_specs(3), q, transport="socket", router="shaping",
+                       bandwidth=hw.TPU_HBM_BW, heartbeat_timeout=120.0)
+    ctl.timeline.call_at(kill_t, lambda t: ctl.transport.kill(1))
+    ctl.run()
+    assert ctl.n_failovers == 1 and ctl.failed_workers == [1]
+    assert len(q.completed) == 20
+    assert all(len(r.tokens) == r.max_new_tokens for r in q.completed)
+    assert ctl.prefill_live == 0
+    # the dead worker never serves past the kill instant
+    assert all(s.t0 <= kill_t + 1e-12 for s in ctl.trace if s.pid == 1)
+
+
+def test_socket_sigstop_half_open_is_unmasked_and_lossless():
+    """SIGSTOP leaves the peer half-open: the socket stays connected so
+    there is no EOF to trip on — only the heartbeat's wall-clock receive
+    timeout can declare it dead.  Nothing may be lost."""
+    q = RequestQueue()
+    _load(q, 16)
+    ctl = make_cluster(_specs(3), q, transport="socket",
+                       router="round_robin", bandwidth=hw.TPU_HBM_BW,
+                       heartbeat_timeout=5.0)
+    ctl.timeline.call_at(1e-7, lambda t: ctl.transport.silence(2))
+    ctl.run()
+    assert 2 in ctl.failed_workers and ctl.n_failovers >= 1
+    assert len(q.completed) == 16
+    assert all(len(r.tokens) == r.max_new_tokens for r in q.completed)
+
+
+def test_requeue_restores_admission_order():
+    """Failover requeue is admission-ordered: a dead worker's requests
+    slot back in FRONT of later admissions (sorted by rid), so sequential
+    failovers can never let newer work jump older work."""
+    q = RequestQueue()
+    _load(q, 6)
+    first, later = q.pop(2), q.pop(2)
+    q.requeue(later)   # out-of-order on purpose
+    q.requeue(first)
+    rids = [r.rid for r in q.pop(6)]
+    assert rids == sorted(rids)
+    assert q.n_requeued == 4
+
+
+# ---------------------------------------------------------------------------
+# elastic membership under load
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("transport", ["loopback", "socket"])
+def test_mid_run_join_serves_load(transport):
+    """A worker joining mid-run becomes placeable and actually serves."""
+    q = RequestQueue()
+    _load(q, 24, prompt_len=16, gen=6)
+    specs = _specs(2)
+    ctl = make_cluster(specs, q, transport=transport, router="round_robin",
+                       bandwidth=hw.TPU_HBM_BW, heartbeat_timeout=120.0)
+    ctl.timeline.call_at(1e-7,
+                         lambda t: ctl.join_worker(_spec_like(specs, 2)))
+    ctl.run()
+    assert ctl.n_joins == 1 and 2 in ctl.views
+    assert len(q.completed) == 24
+    assert any(s.pid == 2 for s in ctl.trace)  # the joiner pulled weight
+
+
+@pytest.mark.parametrize("transport", ["loopback", "socket"])
+def test_drain_then_bye_loses_nothing(transport):
+    """Scale-down is drain-then-Bye: in-flight work finishes, the retiree
+    leaves cleanly, and its op counters stay in the fleet metrics."""
+    q = RequestQueue()
+    _load(q, 20, gen=5)
+    ctl = make_cluster(_specs(3), q, transport=transport, router="shaping",
+                       bandwidth=hw.TPU_HBM_BW, heartbeat_timeout=120.0)
+    ctl.timeline.call_at(1e-7, lambda t: ctl.drain_worker(0))
+    m = ctl.run()
+    assert ctl.n_departures == 1 and ctl.departed_workers == [0]
+    assert 0 not in ctl.views
+    assert ctl.n_failovers == 0 and q.n_requeued == 0
+    assert len(q.completed) == 20
+    assert m.summary()["tokens"] == 20 * 5
+    # the retiree's op counters stay in the fleet-wide registry
+    assert ctl.fleet_registry().get("engine.prefills") > 0
+
+
+def test_drain_refuses_last_placeable_worker():
+    q = RequestQueue()
+    _load(q, 4)
+    ctl = make_cluster(_specs(1), q, transport="loopback",
+                       router="round_robin", bandwidth=hw.TPU_HBM_BW)
+    with pytest.raises(ValueError, match="last placeable"):
+        ctl.drain_worker(0)
+    ctl.run()
+    assert len(q.completed) == 4
+
+
+def test_join_then_kill_replacement_cycle():
+    """Kill one worker, then join a replacement under the same load: the
+    failover and the join compose — nothing lost, both events counted."""
+    q = RequestQueue()
+    _load(q, 24, gen=5)
+    specs = _specs(2)
+    ctl = make_cluster(specs, q, transport="socket", router="shaping",
+                       bandwidth=hw.TPU_HBM_BW, heartbeat_timeout=120.0)
+    ctl.timeline.call_at(1e-7, lambda t: ctl.transport.kill(1))
+    ctl.timeline.call_at(5e-7,
+                         lambda t: ctl.join_worker(_spec_like(specs, 2)))
+    ctl.run()
+    assert ctl.failed_workers == [1] and ctl.n_joins == 1
+    assert q.n_requeued > 0
+    assert len(q.completed) == 24
+    assert all(len(r.tokens) == r.max_new_tokens for r in q.completed)
+
+
+# ---------------------------------------------------------------------------
+# PD pool rebalance on membership change
+# ---------------------------------------------------------------------------
+
+
+def test_pd_join_and_leave_rebalance_pools():
+    """The disaggregated router seats a joiner in a pool (the thinner
+    one) and sheds a leaver from ``pool_of`` — requests keep flowing
+    through both membership changes."""
+    q = RequestQueue()
+    _load(q, 24, prompt_len=16, gen=6)
+    specs = _specs(4)
+    router = PdRouter()
+    ctl = make_cluster(specs, q, transport="loopback", router=router,
+                       bandwidth=hw.TPU_HBM_BW)
+    seen = {}
+
+    def join(t):
+        ctl.join_worker(_spec_like(specs, 4))
+        seen["join_pool"] = router.pool_of.get(4)
+
+    def drain(t):
+        ctl.drain_worker(0)
+
+    ctl.timeline.call_at(1e-7, join)
+    ctl.timeline.call_at(5e-7, drain)
+    ctl.run()
+    assert seen["join_pool"] in ("prefill", "decode")
+    assert 0 not in router.pool_of  # the leaver shed its role
+    assert len(q.completed) == 24
+    assert ctl.n_joins == 1 and ctl.n_departures == 1
+
+
+# ---------------------------------------------------------------------------
+# the full soak, as a slow-marked system test (tier1-full / nightly)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_soak_gates_hold_on_socket():
+    """The benchmark's own goodput gates (pd strictly beats the
+    phase-aligned control, shaping holds parity) plus the lossless
+    chaos kill+join, end-to-end over the TCP transport."""
+    from benchmarks.serving_soak import PARITY, run_chaos_soak, run_soak
+
+    goodput = run_soak(transport="socket", n_requests=256)
+    assert goodput["pd"] > goodput["round_robin"]
+    assert goodput["shaping"] >= PARITY * goodput["round_robin"]
+    gs = run_chaos_soak(transport="socket", n_requests=96)
+    assert gs["completed"] == gs["offered"] - gs["rejected"]
+
+
+# ---------------------------------------------------------------------------
+# cross-host virtual-clock export
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("transport", ["loopback", "mp", "socket"])
+def test_pong_echoes_fleet_virtual_clock(transport):
+    """``Ping.t_virtual`` exports the controller's contention clock; the
+    worker's ``Pong`` echoes its fleet-virtual high-water mark — the max
+    over everything the controller has told it, monotone even when pings
+    regress."""
+    tp = make_transport(transport, _specs(1))
+    try:
+        hello = tp.recv(0, timeout=30.0)
+        assert isinstance(hello, P.Hello)
+        tp.send(0, P.Ping(t_wall=1.0, t_virtual=42.0))
+        pong = tp.recv(0, timeout=30.0)
+        assert isinstance(pong, P.Pong) and pong.t_virtual == 42.0
+        tp.send(0, P.Ping(t_wall=2.0, t_virtual=7.0))  # stale clock
+        pong = tp.recv(0, timeout=30.0)
+        assert pong.t_virtual == 42.0  # high-water mark, not last-write
+    finally:
+        tp.close()

@@ -336,35 +336,42 @@ def test_worker_error_propagates():
 
 
 # ---------------------------------------------------------------------------
-# the real process boundary (multiprocessing pipe transport)
+# the real process boundary (mp pipes and TCP sockets)
 # ---------------------------------------------------------------------------
 
+REMOTE_TRANSPORTS = ("mp", "socket")
 
-def test_mp_cluster_matches_loopback():
-    """The pipe transport is the same protocol over real processes: the
-    virtual-clock metrics must equal the loopback run's."""
+
+@pytest.mark.parametrize("transport", REMOTE_TRANSPORTS)
+@pytest.mark.parametrize("router", ["round_robin", "shaping"])
+def test_remote_cluster_matches_loopback(transport, router):
+    """The remote transports are the same protocol over real processes:
+    pipe or TCP framing must not perturb the virtual clock — metrics must
+    equal the loopback run's exactly, for every router."""
     q_lb = RequestQueue()
     _load(q_lb, 16, gen=4)
     m_lb = make_cluster(_specs(4), q_lb, transport="loopback",
-                        router="shaping", bandwidth=hw.TPU_HBM_BW).run()
-    q_mp = RequestQueue()
-    _load(q_mp, 16, gen=4)
-    m_mp = make_cluster(_specs(4), q_mp, transport="mp", router="shaping",
+                        router=router, bandwidth=hw.TPU_HBM_BW).run()
+    q_rm = RequestQueue()
+    _load(q_rm, 16, gen=4)
+    m_rm = make_cluster(_specs(4), q_rm, transport=transport, router=router,
                         bandwidth=hw.TPU_HBM_BW,
                         heartbeat_timeout=120.0).run()
-    assert len(q_mp.completed) == 16
-    assert _stamps(q_mp) == _stamps(q_lb)
-    assert _summary_no_wall(m_mp) == _summary_no_wall(m_lb)
+    assert len(q_rm.completed) == 16
+    assert _stamps(q_rm) == _stamps(q_lb)
+    assert _summary_no_wall(m_rm) == _summary_no_wall(m_lb)
 
 
-def test_mp_worker_hard_kill_requeues_and_completes():
+@pytest.mark.parametrize("transport", REMOTE_TRANSPORTS)
+def test_remote_worker_hard_kill_requeues_and_completes(transport):
     """The acceptance gate over real processes: SIGKILL one worker process
-    mid-run; pipe EOF marks it dead, its requests fail over, the run
-    completes with no lost requests."""
+    mid-run; pipe/socket EOF marks it dead, its requests fail over, the
+    run completes with no lost requests."""
     q = RequestQueue()
     _load(q, 18, gen=5)
-    ctl = make_cluster(_specs(3), q, transport="mp", router="round_robin",
-                       bandwidth=hw.TPU_HBM_BW, heartbeat_timeout=120.0)
+    ctl = make_cluster(_specs(3), q, transport=transport,
+                       router="round_robin", bandwidth=hw.TPU_HBM_BW,
+                       heartbeat_timeout=120.0)
     ctl.timeline.call_at(1e-7, lambda t: ctl.transport.kill(2))
     ctl.run()
     assert ctl.n_failovers == 1 and ctl.failed_workers == [2]
